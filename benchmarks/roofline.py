@@ -1,0 +1,109 @@
+"""Roofline report generator: reads the dry-run artifacts and renders the
+per-(arch × shape × mesh) three-term table for EXPERIMENTS.md §Roofline.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single|multi|both]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+_SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_rows(tag: str = "") -> "list[dict]":
+    rows = []
+    for mesh in ("single", "multi"):
+        d = os.path.join(RESULTS, mesh + tag)
+        if not os.path.isdir(d):
+            continue
+        for fn in sorted(os.listdir(d)):
+            with open(os.path.join(d, fn)) as f:
+                r = json.load(f)
+            roof = r["roofline"]
+            total = (roof["compute_s"] + roof["memory_s"]
+                     + roof["collective_s"]) or 1e-30
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": mesh,
+                "mode": r["mode"], "chips": r["chips"],
+                "compute_s": roof["compute_s"], "memory_s": roof["memory_s"],
+                "collective_s": roof["collective_s"],
+                "dominant": roof["dominant"],
+                "frac": roof["roofline_fraction"],
+                "useful": roof["useful_flops_ratio"],
+                "coll_share": roof["collective_s"] / max(
+                    roof["compute_s"], roof["memory_s"],
+                    roof["collective_s"], 1e-30),
+                "temp_gb": (r["memory"]["temp_bytes"] or 0) / 2**30,
+                "hbm_ok": ((r["memory"]["temp_bytes"] or 0)
+                           + (r["memory"]["argument_bytes"] or 0)) / 2**30
+                          < 16.0,
+            })
+    rows.sort(key=lambda r: (r["mesh"], r["arch"],
+                             _SHAPE_ORDER.index(r["shape"])))
+    return rows
+
+
+def render_markdown(rows, mesh="single"):
+    out = ["| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO flops | roofline frac | temp GiB |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["mesh"] != mesh:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} | "
+            f"{r['memory_s']:.2e} | {r['collective_s']:.2e} | "
+            f"{r['dominant']} | {r['useful']:.2f} | {r['frac']:.3f} | "
+            f"{r['temp_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def summarize(print_table: bool = True, tag: str = ""):
+    rows = load_rows(tag)
+    if print_table and rows:
+        for mesh in ("single", "multi"):
+            if any(r["mesh"] == mesh for r in rows):
+                print(f"\n== {mesh}-pod mesh ==")
+                print(render_markdown(rows, mesh))
+    return rows
+
+
+def pick_hillclimb_cells(rows):
+    """Assignment rule: worst roofline fraction, most collective-bound,
+    most representative of the paper's technique (GEMM-dominated train).
+
+    Decode cells are excluded from the "worst fraction" pick: their
+    fraction is bounded by decode arithmetic intensity (tokens/chip), not
+    by the implementation — see EXPERIMENTS.md §3.
+    """
+    single = [r for r in rows if r["mesh"] == "single"]
+    improvable = [r for r in single if r["mode"] != "decode"]
+    worst = min(improvable, key=lambda r: r["frac"] if r["frac"] > 0 else 1e9)
+    coll = max(single, key=lambda r: r["coll_share"])
+    train = [r for r in single if r["mode"] == "train"]
+    rep = max(train, key=lambda r: r["compute_s"])
+    return {"worst_fraction": worst, "most_collective": coll,
+            "paper_representative": rep}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = summarize(tag=args.tag)
+    if rows:
+        picks = pick_hillclimb_cells(rows)
+        print("\n== hillclimb picks ==")
+        for why, r in picks.items():
+            print(f"{why}: {r['arch']} x {r['shape']} "
+                  f"(frac={r['frac']:.3f}, dominant={r['dominant']}, "
+                  f"coll_share={r['coll_share']:.2f})")
+
+
+if __name__ == "__main__":
+    main()

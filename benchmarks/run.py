@@ -1,0 +1,311 @@
+"""Benchmark harness — one function per paper table/figure + the TPU
+roofline report.  Prints ``name,us_per_call,derived`` CSV rows
+(us_per_call = wall time of the benchmark computation itself; derived =
+the headline metric that the corresponding paper artifact reports).
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived: str):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Table 2 / Eq. 1 — throughput of the configurable unit.
+# ---------------------------------------------------------------------------
+
+def bench_eq1_throughput():
+    from repro.core.config import CASE_STUDY, scaling_sweep
+    from repro.core.hardware import TERA
+    from repro.core.precision import DataType
+
+    def run():
+        rows = []
+        for cfg in [CASE_STUDY] + scaling_sweep():
+            rows.append((cfg.describe(),
+                         cfg.throughput(DataType.INT8) / TERA))
+        return rows
+
+    rows, us = timed(run)
+    case = rows[0][1]
+    emit("eq1_throughput_case_study", us, f"tops_int8={case:.3f}(paper:4.096)")
+    lo = min(r[1] for r in rows)
+    hi = max(r[1] for r in rows)
+    emit("eq1_scaling_envelope", us, f"tops_range={lo:.2f}..{hi:.1f}"
+         f"(paper:0.5..32)")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 — GEMM utilization across the four CPU platforms (2 TOPS unit).
+# ---------------------------------------------------------------------------
+
+def bench_fig6_platforms():
+    from repro.core.config import PLATFORM_2TOPS
+    from repro.core.hardware import PLATFORMS
+    from repro.core.simulator import simulate_gemm
+    from repro.core.task import MatMulTask
+
+    def run():
+        out = {}
+        for name, platform in PLATFORMS.items():
+            utils = []
+            for k in (256, 512, 1024, 2048, 4096, 8192):
+                r = simulate_gemm(PLATFORM_2TOPS,
+                                  MatMulTask(m=512, n=512, k=k), platform)
+                utils.append(r.utilization)
+            out[name] = min(utils)
+        return out
+
+    out, us = timed(run)
+    worst = min(out.values())
+    detail = " ".join(f"{k}={v:.3f}" for k, v in out.items())
+    emit("fig6_gemm_util_4platforms", us,
+         f"min_util={worst:.3f}(paper:>0.90) {detail}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — utilization across compute/bandwidth scales, Eq.2-sized.
+# ---------------------------------------------------------------------------
+
+def bench_fig7_scaling():
+    from repro.core import constraint
+    from repro.core.config import MatrixUnitConfig
+    from repro.core.hardware import GIGA, SHUTTLE
+    from repro.core.simulator import simulate_gemm
+    from repro.core.task import MatMulTask
+
+    #: paper-style points — four bandwidth settings, each with a peak
+    #: sized to the balance the paper's Fig. 7 shows (~0.8 band with the
+    #: printed-Eq.2 64x64 scratchpad): (PE, K_pe bits, bandwidth GB/s).
+    points = [((2, 2), 256, 8), ((2, 2), 512, 16), ((4, 4), 256, 32),
+              ((4, 4), 512, 64),
+              ((4, 4), 512, 48)]     # the Table-2 case study (starved)
+
+    def run():
+        paper_band, ours_band = [], []
+        for (m, n), kb, bw in points:
+            base = MatrixUnitConfig(m_pe=m, n_pe=n, k_pe_bits=kb,
+                                    bandwidth=bw * GIGA)
+            task = MatMulTask(m=512, n=512, k=4096)
+            # Paper's printed Eq.2 keeps the 64x64 scratchpad.
+            paper_band.append(simulate_gemm(base, task, SHUTTLE).utilization)
+            # Saturating direction (beyond-paper): Eq.2 solved for >=100%.
+            ms, ns = constraint.solve_scratchpad(base)
+            sat = base.with_(m_scp=ms, n_scp=ns)
+            ours_band.append(simulate_gemm(sat, task, SHUTTLE).utilization)
+        return paper_band, ours_band
+
+    (paper_band, ours_band), us = timed(run)
+    emit("fig7_scaling_paper_eq2", us,
+         "util=" + "/".join(f"{u:.2f}" for u in paper_band)
+         + "(paper:~0.80)")
+    emit("fig7_scaling_saturating_eq2", us,
+         "util=" + "/".join(f"{u:.2f}" for u in ours_band)
+         + "(beyond-paper:>0.9)")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — large-GEMM throughput vs the commercial baselines.
+# ---------------------------------------------------------------------------
+
+def bench_fig8_gemm():
+    from repro.core.config import CASE_STUDY
+    from repro.core.hardware import BASELINES, SHUTTLE, TERA
+    from repro.core.simulator import (LayerTrace, baseline_layer_seconds,
+                                      simulate_gemm)
+    from repro.core.task import MatMulTask
+
+    def run():
+        task = MatMulTask(m=512, n=512, k=4096)
+        ours = simulate_gemm(CASE_STUDY, task, SHUTTLE)
+        ours_tops = task.flops / ours.seconds(CASE_STUDY.freq_hz) / TERA
+        rel = {}
+        for name, base in BASELINES.items():
+            t = baseline_layer_seconds(base, LayerTrace("g", (task,)))
+            rel[name] = task.flops / t / TERA
+        return ours_tops, rel
+
+    (ours_tops, rel), us = timed(run)
+    detail = " ".join(f"vs_{k}={ours_tops / v:.2f}x" for k, v in rel.items())
+    emit("fig8_gemm_vs_baselines", us,
+         f"ours={ours_tops:.2f}TOPS {detail}(paper:>1x amx/mma,~1x sme)")
+
+
+# ---------------------------------------------------------------------------
+# Table 6 / Figs. 9–11 — model inference, fused vs unfused vs baselines.
+# ---------------------------------------------------------------------------
+
+def bench_table6_models():
+    from benchmarks.workloads import WORKLOADS
+    from repro.core.config import CASE_STUDY
+    from repro.core.hardware import BASELINES
+    from repro.core.simulator import (baseline_workload_seconds,
+                                      simulate_workload)
+
+    paper = {  # Table 6 (R, B, L) rows: (unfused, fused) speedups.
+        "resnet50": {"xeon8580": (1.19, 1.57), "ibms1022": (7.16, 8.87),
+                     "applem4": (3.82, 5.04)},
+        "bert": {"xeon8580": (1.28, 1.57), "ibms1022": (2.72, 3.33),
+                 "applem4": (1.72, 2.11)},
+        "llama3": {"xeon8580": (1.87, 2.31), "ibms1022": (2.39, 3.08),
+                   "applem4": (2.55, 3.16)},
+    }
+
+    for wname, build in WORKLOADS.items():
+        layers = build()
+        t0 = time.perf_counter()
+        fused = simulate_workload(CASE_STUDY, layers, fused=True)["seconds"]
+        unfused = simulate_workload(CASE_STUDY, layers,
+                                    fused=False)["seconds"]
+        us = (time.perf_counter() - t0) * 1e6
+        for bname, base in BASELINES.items():
+            tb = baseline_workload_seconds(base, layers, workload=wname)
+            tb_raw = baseline_workload_seconds(base, layers)
+            su_u, su_f = tb / unfused, tb / fused
+            pu, pf = paper[wname][bname]
+            emit(f"table6_{wname}_vs_{bname}", us,
+                 f"unfused={su_u:.2f}x fused={su_f:.2f}x"
+                 f"(paper:{pu:.2f}/{pf:.2f}) raw_hw={tb_raw / fused:.2f}x")
+        emit(f"table6_{wname}_fusion_gain", us,
+             f"fused_over_unfused={unfused / fused:.2f}x"
+             f"(paper_implied:{paper[wname]['xeon8580'][1] / paper[wname]['xeon8580'][0]:.2f}x)")
+
+
+# ---------------------------------------------------------------------------
+# §1 overlap-contribution claim (66.7/50.9/33.6 % of gain vs Xeon).
+# ---------------------------------------------------------------------------
+
+def bench_overlap_contribution():
+    from benchmarks.workloads import WORKLOADS
+    from repro.core.config import CASE_STUDY
+    from repro.core.hardware import XEON_8580
+    from repro.core.simulator import (baseline_workload_seconds,
+                                      simulate_workload)
+
+    paper = {"resnet50": 66.7, "bert": 50.9, "llama3": 33.6}
+    for wname, build in WORKLOADS.items():
+        layers = build()
+        t0 = time.perf_counter()
+        fused = simulate_workload(CASE_STUDY, layers, fused=True)["seconds"]
+        unfused = simulate_workload(CASE_STUDY, layers,
+                                    fused=False)["seconds"]
+        tb = baseline_workload_seconds(XEON_8580, layers, workload=wname)
+        us = (time.perf_counter() - t0) * 1e6
+        su_f, su_u = tb / fused, tb / unfused
+        contrib = 100.0 * (su_f - su_u) / max(su_f - 1.0, 1e-9)
+        emit(f"overlap_contribution_{wname}", us,
+             f"pct_of_gain={contrib:.1f}(paper:{paper[wname]:.1f})")
+
+
+# ---------------------------------------------------------------------------
+# Table 7 — area/power.
+# ---------------------------------------------------------------------------
+
+def bench_table7_area():
+    from repro.core.area import estimate
+    from repro.core.config import CASE_STUDY
+
+    ap, us = timed(lambda: estimate(CASE_STUDY))
+    emit("table7_area_power", us,
+         f"mm2={ap.total_mm2:.3f}(paper:0.531) W={ap.total_w:.3f}"
+         f"(paper:1.506)")
+    sat, us2 = timed(lambda: estimate(CASE_STUDY.with_(m_scp=128,
+                                                       n_scp=128)))
+    emit("table7_area_saturating_variant", us2,
+         f"mm2={sat.total_mm2:.3f} (+{sat.total_mm2 - ap.total_mm2:.3f} "
+         f"buys >95% util)")
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel microbenchmark (interpret mode: correctness-grade timing).
+# ---------------------------------------------------------------------------
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core.fusion import Epilogue
+    from repro.kernels.matmul.ops import fused_matmul
+    from repro.kernels.matmul.ref import fused_matmul_ref
+
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(1), (512, 512), jnp.bfloat16)
+    ep = Epilogue(activation="gelu", out_dtype=jnp.bfloat16)
+    out = fused_matmul(a, b, epilogue=ep, block_shape=(128, 128, 128))
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    out = fused_matmul(a, b, epilogue=ep, block_shape=(128, 128, 128))
+    out.block_until_ready()
+    us = (time.perf_counter() - t0) * 1e6
+    ref = fused_matmul_ref(a, b, epilogue=ep)
+    r = np.asarray(ref, np.float32)
+    err = float(np.abs(np.asarray(out, np.float32) - r).max()
+                / (np.abs(r).max() + 1e-9))
+    emit("kernel_fused_matmul_interpret", us, f"rel_err={err:.2e}")
+
+
+# ---------------------------------------------------------------------------
+# TPU roofline report (reads the dry-run artifacts).
+# ---------------------------------------------------------------------------
+
+def bench_roofline():
+    from benchmarks.roofline import pick_hillclimb_cells, summarize
+    t0 = time.perf_counter()
+    rows = summarize(print_table=False)
+    us = (time.perf_counter() - t0) * 1e6
+    if not rows:
+        emit("roofline_table", us, "no dry-run artifacts (run dryrun --all)")
+        return
+    emit("roofline_cells", us, f"n={len(rows)}")
+    picks = pick_hillclimb_cells(rows)
+    for why, r in picks.items():
+        emit(f"roofline_{why}", us,
+             f"{r['arch']}x{r['shape']} frac={r['frac']:.3f} "
+             f"dom={r['dominant']} coll_share={r['coll_share']:.2f}")
+    best = max((r for r in rows if r["mesh"] == "single"),
+               key=lambda r: r["frac"])
+    emit("roofline_best_cell", us,
+         f"{best['arch']}x{best['shape']} frac={best['frac']:.3f}")
+
+
+BENCHES = {
+    "eq1": bench_eq1_throughput,
+    "fig6": bench_fig6_platforms,
+    "fig7": bench_fig7_scaling,
+    "fig8": bench_fig8_gemm,
+    "table6": bench_table6_models,
+    "overlap": bench_overlap_contribution,
+    "table7": bench_table7_area,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=tuple(BENCHES), default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,140 @@
+"""Layer-shape traces for the paper's three evaluation models (§5.1):
+ResNet-50 v1.5, BERT-base (seq 384), Llama3.2-1B (SmoothQuant-O1 int8).
+
+Convolutions are expressed as im2col GEMMs (M = OH·OW, N = C_out,
+K = C_in·kh·kw) — the mapping the matrix unit executes.  Vector-op
+element counts drive the Saturn model: (de)quantization around every
+int8 GEMM, activations, normalisation, softmax; the SiLU/softmax divide
+cost is what makes Llama3's Gate/Up and Score ops expensive on Saturn
+(paper §5.4).
+"""
+
+from __future__ import annotations
+
+from repro.core.simulator import LayerTrace
+from repro.core.task import BiasType, MatMulTask
+
+
+def _gemm(m, n, k, bias=BiasType.ROW):
+    return MatMulTask(m=m, n=n, k=k, bias_type=bias)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-50 v1.5, batch 1, int8.
+# ---------------------------------------------------------------------------
+
+def resnet50_layers() -> "list[LayerTrace]":
+    layers = []
+
+    def conv(name, hw, cin, cout, kk, repeat=1, residual=False):
+        m, k = hw * hw, cin * kk * kk
+        vec = {"quant": m * cout, "dequant": m * cout, "relu": m * cout}
+        if residual:
+            vec["residual"] = m * cout
+        layers.append(LayerTrace(
+            name=name, gemms=(_gemm(m, cout, k),), vector_ops=vec,
+            intermediate_bytes=4.0 * m * cout, repeat=repeat))
+
+    conv("conv1", 112, 3, 64, 7)
+    # Bottleneck stages: (blocks, hw, width, out).
+    for stage, (blocks, hw, w, out, cin) in enumerate([
+            (3, 56, 64, 256, 64), (4, 28, 128, 512, 256),
+            (6, 14, 256, 1024, 512), (3, 7, 512, 2048, 1024)]):
+        conv(f"s{stage}_proj", hw, cin, out, 1)          # shortcut proj
+        for b in range(blocks):
+            c_in = cin if b == 0 else out
+            conv(f"s{stage}b{b}_1x1a", hw, c_in, w, 1)
+            conv(f"s{stage}b{b}_3x3", hw, w, w, 3)
+            conv(f"s{stage}b{b}_1x1b", hw, w, out, 1, residual=True)
+    layers.append(LayerTrace(
+        "fc", gemms=(_gemm(1, 1000, 2048),),
+        vector_ops={"pool": 7 * 7 * 2048, "dequant": 1000},
+        intermediate_bytes=4.0 * 2048))
+    return layers
+
+
+# ---------------------------------------------------------------------------
+# BERT-base, seq 384, batch 1, int8 (the paper's small-GEMM stress).
+# ---------------------------------------------------------------------------
+
+def bert_base_layers(seq: int = 384) -> "list[LayerTrace]":
+    d, h, dh, ff = 768, 12, 64, 3072
+    per_layer = [
+        LayerTrace("qkv", gemms=(_gemm(seq, 3 * d, d),),
+                   vector_ops={"quant": seq * 3 * d, "dequant": seq * 3 * d},
+                   intermediate_bytes=4.0 * seq * 3 * d),
+        LayerTrace("scores", gemms=tuple(_gemm(seq, seq, dh,
+                                               bias=BiasType.ZERO)
+                                         for _ in range(h)),
+                   vector_ops={"softmax": h * seq * seq},
+                   intermediate_bytes=4.0 * h * seq * seq),
+        LayerTrace("context", gemms=tuple(_gemm(seq, dh, seq,
+                                                bias=BiasType.ZERO)
+                                          for _ in range(h)),
+                   vector_ops={"dequant": seq * d},
+                   intermediate_bytes=4.0 * seq * d),
+        LayerTrace("out_proj", gemms=(_gemm(seq, d, d),),
+                   vector_ops={"layernorm": seq * d, "residual": seq * d,
+                               "quant": seq * d},
+                   intermediate_bytes=4.0 * seq * d),
+        LayerTrace("ffn_in", gemms=(_gemm(seq, ff, d),),
+                   vector_ops={"gelu": seq * ff, "quant": seq * ff,
+                               "dequant": seq * ff},
+                   intermediate_bytes=4.0 * seq * ff),
+        LayerTrace("ffn_out", gemms=(_gemm(seq, d, ff),),
+                   vector_ops={"layernorm": seq * d, "residual": seq * d,
+                               "dequant": seq * d},
+                   intermediate_bytes=4.0 * seq * d),
+    ]
+    return [LayerTrace(l.name, l.gemms, l.vector_ops, l.intermediate_bytes,
+                       repeat=12) for l in per_layer]
+
+
+# ---------------------------------------------------------------------------
+# Llama3.2-1B, prefill 512, int8 SmoothQuant-O1.
+# ---------------------------------------------------------------------------
+
+def llama3_1b_layers(seq: int = 512) -> "list[LayerTrace]":
+    d, hq, hkv, dh, ff, v = 2048, 32, 8, 64, 8192, 128256
+    per_layer = [
+        LayerTrace("qkv", gemms=(_gemm(seq, (hq + 2 * hkv) * dh, d),),
+                   vector_ops={"rmsnorm": seq * d, "rope": seq * hq * dh,
+                               "quant": seq * d, "dequant": seq * 3 * d},
+                   intermediate_bytes=4.0 * seq * 3 * d),
+        LayerTrace("score", gemms=tuple(_gemm(seq, seq, dh,
+                                              bias=BiasType.ZERO)
+                                        for _ in range(hq)),
+                   vector_ops={"softmax": hq * seq * seq},
+                   intermediate_bytes=4.0 * hq * seq * seq),
+        LayerTrace("context", gemms=tuple(_gemm(seq, dh, seq,
+                                                bias=BiasType.ZERO)
+                                          for _ in range(hq)),
+                   vector_ops={"dequant": seq * d},
+                   intermediate_bytes=4.0 * seq * d),
+        LayerTrace("o_proj", gemms=(_gemm(seq, d, d, bias=BiasType.ZERO),),
+                   vector_ops={"residual": seq * d, "quant": seq * d},
+                   intermediate_bytes=4.0 * seq * d),
+        # Gate & Up — the SiLU divide makes these vector-heavy (§5.4).
+        LayerTrace("gate_up", gemms=(_gemm(seq, 2 * ff, d,
+                                           bias=BiasType.ZERO),),
+                   vector_ops={"rmsnorm": seq * d, "silu": seq * ff,
+                               "glu_mul": seq * ff, "quant": seq * ff,
+                               "dequant": seq * 2 * ff},
+                   intermediate_bytes=4.0 * seq * 2 * ff),
+        LayerTrace("down", gemms=(_gemm(seq, d, ff, bias=BiasType.ZERO),),
+                   vector_ops={"residual": seq * d, "dequant": seq * d},
+                   intermediate_bytes=4.0 * seq * d),
+    ]
+    layers = [LayerTrace(l.name, l.gemms, l.vector_ops,
+                         l.intermediate_bytes, repeat=16) for l in per_layer]
+    layers.append(LayerTrace(
+        "lm_head", gemms=(_gemm(1, v, d, bias=BiasType.ZERO),),
+        vector_ops={"softmax": v}, intermediate_bytes=4.0 * v))
+    return layers
+
+
+WORKLOADS = {
+    "resnet50": resnet50_layers,
+    "bert": bert_base_layers,
+    "llama3": llama3_1b_layers,
+}

@@ -1,0 +1,31 @@
+"""Reproduce the paper's headline numbers in one command.
+
+    PYTHONPATH=src python examples/paper_figures.py
+
+Prints the Fig.6 utilization curves, the Fig.7 scaling band, the Table 6
+fused/unfused speedups with the overlap-contribution split (§1: 66.7 /
+50.9 / 33.6 %), and Table 7 area/power — all from the cycle-approximate
+simulator of the CUTEv2 matrix unit.
+"""
+
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import run as bench
+
+
+def main():
+    print("name,us_per_call,derived")
+    bench.bench_eq1_throughput()
+    bench.bench_fig6_platforms()
+    bench.bench_fig7_scaling()
+    bench.bench_fig8_gemm()
+    bench.bench_table6_models()
+    bench.bench_overlap_contribution()
+    bench.bench_table7_area()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""End-to-end driver: train a ~100M-param llama-arch model for a few
+hundred steps on the synthetic stream, with fault-tolerant checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 [--small]
+
+``--small`` shrinks to smoke scale (seconds on CPU).  The default builds
+a genuine ~100M-parameter model (d=640, 10 layers, 32k vocab) and runs
+the full production loop: sharded init, microbatched train step, async
+checkpoints, straggler watchdog, resume-on-restart (deliverable (b)).
+"""
+
+import argparse
+import os
+import sys
+import time
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.base import family_module
+from repro.optim import adamw
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.watchdog import StepWatchdog
+from repro.training.train_step import TrainConfig, make_train_step
+
+
+def build_config(small: bool):
+    base = get_config("yi-6b")          # llama-arch family wiring
+    if small:
+        return base.with_(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          head_dim=16, d_ff=128, vocab_size=512,
+                          dtype=jnp.float32, remat="none", attn_chunk=64)
+    return base.with_(n_layers=10, d_model=640, n_heads=10, n_kv_heads=5,
+                      head_dim=64, d_ff=1920, vocab_size=32000,
+                      dtype=jnp.float32, remat="none", attn_chunk=256)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--small", action="store_true")
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = build_config(args.small)
+    if args.small:
+        args.seq_len = min(args.seq_len, 64)
+    mod = family_module(cfg)
+    print(f"model: {cfg.param_count() / 1e6:.1f}M params "
+          f"({cfg.n_layers}L d={cfg.d_model} vocab={cfg.padded_vocab})")
+
+    tcfg = TrainConfig(
+        optimizer=adamw.AdamWConfig(lr=3e-3, total_steps=args.steps,
+                                    warmup_steps=max(args.steps // 20, 1)),
+        loss_chunk=min(256, args.seq_len))
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  global_batch=args.global_batch,
+                                  seq_len=args.seq_len))
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    wd = StepWatchdog()
+
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    opt = adamw.init(tcfg.optimizer, params)
+    start = 0
+    if mgr.latest_step() is not None:
+        restored, extra = mgr.restore(mgr.latest_step(),
+                                      {"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        data.load_state_dict(extra["data"])
+        start = extra["step"]
+        print(f"resumed from step {start}")
+
+    first_loss = None
+    for step in range(start, args.steps):
+        t0 = time.perf_counter()
+        params, opt, metrics, _ = step_fn(params, opt, next(data))
+        loss = float(metrics["loss"])
+        wd.record_step(time.perf_counter() - t0)
+        if first_loss is None:
+            first_loss = loss
+        if step % 20 == 0:
+            print(f"step {step:4d}  loss {loss:.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"{(time.perf_counter() - t0) * 1e3:.0f} ms", flush=True)
+        if (step + 1) % 100 == 0:
+            mgr.save_async(step + 1, {"params": params, "opt": opt},
+                           extra={"data": data.state_dict(),
+                                  "step": step + 1})
+    mgr.wait()
+    wd.close()
+    print(f"final loss {loss:.4f} (started {first_loss:.4f}); "
+          f"checkpoints at {args.ckpt_dir}: steps {mgr.all_steps()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Mixed-precision policies (paper §4.1: TF32 / BF16 / FP16 / INT8 / FP8).
+
+The PE in CUTEv2 multiplies in the input format and accumulates after
+aligning to a common exponent — i.e. a wide accumulator.  On TPU the MXU
+does the same thing natively: bf16/fp16/fp8 inputs accumulate in fp32,
+int8 inputs accumulate in int32.  ``DataType`` mirrors the paper's
+interface-register enum (Table 1), and ``PrecisionPolicy`` carries
+everything a kernel or a layer needs to know.
+
+TF32 note: TPUs have no 19-bit format; the closest native behaviour is
+fp32 data fed through the MXU with bf16x3 decomposition (XLA's
+``highest`` precision) — we map TF32 to that and record the substitution
+(DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import jax.numpy as jnp
+from jax import lax
+
+
+class DataType(str, enum.Enum):
+    """Paper Table 1 ``DataType`` interface register."""
+
+    INT8 = "int8"
+    FP8_E4M3 = "fp8_e4m3"
+    FP8_E5M2 = "fp8_e5m2"
+    FP16 = "fp16"
+    BF16 = "bf16"
+    TF32 = "tf32"
+    FP32 = "fp32"     # escape hatch for references / tests
+
+
+_JNP = {
+    DataType.INT8: jnp.int8,
+    DataType.FP8_E4M3: jnp.float8_e4m3fn,
+    DataType.FP8_E5M2: jnp.float8_e5m2,
+    DataType.FP16: jnp.float16,
+    DataType.BF16: jnp.bfloat16,
+    DataType.TF32: jnp.float32,   # see module docstring
+    DataType.FP32: jnp.float32,
+}
+
+_ACCUM = {
+    DataType.INT8: jnp.int32,
+    DataType.FP8_E4M3: jnp.float32,
+    DataType.FP8_E5M2: jnp.float32,
+    DataType.FP16: jnp.float32,
+    DataType.BF16: jnp.float32,
+    DataType.TF32: jnp.float32,
+    DataType.FP32: jnp.float32,
+}
+
+_BITS = {
+    DataType.INT8: 8,
+    DataType.FP8_E4M3: 8,
+    DataType.FP8_E5M2: 8,
+    DataType.FP16: 16,
+    DataType.BF16: 16,
+    DataType.TF32: 32,   # stored as fp32
+    DataType.FP32: 32,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    """Input/accumulate/output dtypes for one matmul."""
+
+    data_type: DataType
+    out_dtype: object = None          # default: accum dtype
+
+    @property
+    def in_dtype(self):
+        return _JNP[self.data_type]
+
+    @property
+    def accum_dtype(self):
+        return _ACCUM[self.data_type]
+
+    @property
+    def bits(self) -> int:
+        return _BITS[self.data_type]
+
+    @property
+    def bytes_per_elem(self) -> float:
+        return self.bits / 8
+
+    @property
+    def output_dtype(self):
+        return self.out_dtype if self.out_dtype is not None else self.accum_dtype
+
+    @property
+    def dot_precision(self):
+        """XLA dot precision for the einsum backend."""
+        if self.data_type == DataType.TF32:
+            return lax.Precision.HIGHEST   # bf16x3 ≈ tf32-or-better
+        return lax.Precision.DEFAULT
+
+    def preferred_element_type(self):
+        return self.accum_dtype
+
+
+def policy(dt: "DataType | str", out_dtype=None) -> PrecisionPolicy:
+    if isinstance(dt, str):
+        dt = DataType(dt)
+    return PrecisionPolicy(dt, out_dtype)
+
+
+BF16 = policy(DataType.BF16)
+INT8 = policy(DataType.INT8)
+FP8 = policy(DataType.FP8_E4M3)
+FP16 = policy(DataType.FP16)
+TF32 = policy(DataType.TF32)
+FP32 = policy(DataType.FP32)

@@ -1,0 +1,134 @@
+"""Three-term roofline model for the TPU adaptation.
+
+    compute   = HLO_FLOPs   / peak_FLOP/s            (per chip)
+    memory    = HLO_bytes   / HBM_bw                 (per chip)
+    collective= coll_bytes  / link_bw                (per chip)
+
+``cost_analysis()`` on a GSPMD-compiled executable reports *per-device*
+FLOPs/bytes (verified empirically in the API prototype), so the terms
+divide by single-chip peaks; the assignment's ``/(chips × …)`` form is
+recovered by multiplying FLOPs back up — both are recorded in the
+dry-run JSON.  Collective bytes come from summing operand sizes of
+``all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute`` ops in the compiled HLO text (they are not in
+``cost_analysis``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.core.hardware import TARGET_CHIP, TpuChip
+
+_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:[%\w.\-]+\s*=\s*)?"
+    r"((?:\([^)]*\)|[\w\[\],{}\s]+?))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8e4m3fn|f8e5m2|s32|u32|s16|u16|"
+                       r"s8|u8|pred)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(sig: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(sig):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> "dict[str, float]":
+    """Sum output-shape bytes of every collective op, by op kind.
+
+    HLO prints the result shape before the op name; for collectives the
+    result size equals (all-reduce) or upper-bounds (all-gather output =
+    gathered size) the bytes moved per device, which is the quantity the
+    link-bandwidth term wants.  ``-start``/``-done`` async pairs are
+    counted once (the ``-done`` op repeats the shape; we skip it).
+    """
+    per_kind: "dict[str, float]" = {}
+    seen_done = set()
+    for m in re.finditer(
+            r"^\s*(?:ROOT\s+)?([%\w.\-]+)\s*=\s*([^=\n]*?)\s*"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start|-done)?\(",
+            hlo_text, re.M):
+        name, sig, kind, phase = m.group(1), m.group(2), m.group(3), m.group(4)
+        if phase == "-done":
+            continue
+        b = _shape_bytes(sig)
+        per_kind[kind] = per_kind.get(kind, 0.0) + b
+    per_kind["total"] = sum(per_kind.values())
+    return per_kind
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    chips: int
+    model_flops_per_chip: float      # 6·N·D (dense) / 6·N_active·D (MoE), per chip
+    chip: TpuChip = TARGET_CHIP
+    dtype_peak: str = "bf16"
+
+    @property
+    def peak(self) -> float:
+        return (self.chip.peak_int8 if self.dtype_peak == "int8"
+                else self.chip.peak_bf16)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / self.peak
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / self.chip.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / self.chip.ici_bw_total
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat / redundancy waste."""
+        return (self.model_flops_per_chip / self.flops_per_chip
+                if self.flops_per_chip else 0.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-compute time / achievable step time (the score)."""
+        useful_s = self.model_flops_per_chip / self.peak
+        return useful_s / self.bound_s if self.bound_s else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }

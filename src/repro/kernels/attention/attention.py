@@ -1,0 +1,80 @@
+"""Blockwise (flash) attention Pallas kernel for the model zoo.
+
+Attention is the second GEMM hot-spot the paper's fusion argument applies
+to: QK^T and PV are matrix-unit work while softmax (exp + the divide the
+paper calls out as expensive on vector units, §5.4) is vector work.  The
+online-softmax formulation interleaves them at block granularity — the
+same matrix/vector software pipeline as Listing 1, realised in VMEM.
+
+Features needed by the assigned architectures:
+  * causal masking (all decoder LMs),
+  * local sliding-window masking (gemma2 alternating layers, window 4096;
+    recurrentgemma local-attention blocks, window 2048),
+  * logit soft-capping (gemma2: 50.0 on attention scores),
+  * GQA — H query heads share H_kv KV heads,
+  * key-padding mask (``seq_len_k``) so the wrapper can pad freely,
+  * ``q_start`` offset for chunked prefill.
+
+Grid: (B·H, Sq/bq, Sk/bkv), KV innermost; online-softmax stats (m, l)
+and the output accumulator live in VMEM scratch across the KV sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+_STATS_LANES = 128     # m/l stats replicated across one lane register
+
+
+def flash_attention_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                           *, sm_scale: float, causal: bool, window: int,
+                           softcap: float, seq_len_k: int, q_start: int,
+                           n_kv: int, bq: int, bkv: int):
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bkv, d)
+    v = v_ref[0].astype(jnp.float32)              # (bkv, d)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+
+    qpos = q_start + pl.program_id(1) * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bkv), 0)
+    kpos = jk * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = kpos < seq_len_k
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+
+    s_masked = jnp.where(mask, s, NEG_INF)
+    m_prev = m_ref[:, :1]                         # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s_masked, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (bq, bkv)
+    alpha = jnp.exp(m_prev - m_new)               # (bq, 1)
+
+    l_ref[...] = alpha * l_ref[...] + jnp.broadcast_to(
+        jnp.sum(p, axis=1, keepdims=True), l_ref.shape)
+    acc_ref[...] = alpha * acc_ref[...] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(jk == n_kv - 1)
+    def _finish():
+        l = l_ref[:, :1]
+        l = jnp.where(l == 0.0, 1.0, l)           # fully-masked rows -> 0
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)

@@ -1,0 +1,36 @@
+"""Dense-attention oracle with identical mask semantics to the kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, sm_scale: float = None, causal: bool = True,
+                  window: int = 0, softcap: float = 0.0, q_start: int = 0):
+    """q: (B, H, Sq, D); k, v: (B, Hkv, Sk, D).  fp32 math throughout."""
+    b, h, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    if sm_scale is None:
+        sm_scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    group = h // hkv
+    kk = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kk) * sm_scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = q_start + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax of all -inf -> uniform; zero them instead.
+    any_valid = mask.any(axis=-1)[None, None, :, None]
+    p = jnp.where(any_valid, p, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv).astype(q.dtype)

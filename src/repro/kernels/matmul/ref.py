@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the fused matmul kernel.
+
+Deliberately boring: one ``jnp.matmul`` in the accumulate dtype plus the
+*shared* ``apply_epilogue`` (the kernel reuses the same epilogue function
+tile-wise, so tests exercise the tiling/accumulation logic, not two
+copies of the same arithmetic).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.fusion import Epilogue, EpilogueOperands, apply_epilogue
+
+
+def fused_matmul_ref(a, b, *, epilogue: Epilogue = Epilogue(),
+                     operands: EpilogueOperands = EpilogueOperands(),
+                     accum_dtype=jnp.float32):
+    """a: (M, K); b: (K, N) — or (K, 2, N/2) when epilogue.glu."""
+    if b.ndim == 3:
+        b = b.reshape(b.shape[0], -1)
+    acc = jnp.matmul(a, b, preferred_element_type=accum_dtype)
+    return apply_epilogue(acc, epilogue, operands)

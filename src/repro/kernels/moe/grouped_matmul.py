@@ -1,0 +1,37 @@
+"""Grouped (per-expert) GEMM kernel for MoE layers.
+
+Capacity-dispatched MoE turns the expert MLP into a batched ragged GEMM:
+``x (E, Cap, K) @ w (E, K, N) -> (E, Cap, N)``.  On TPU the clean mapping
+is a 4-D grid with the expert axis outermost — each expert's weight panel
+is DMA'd once and reused across its capacity tiles, which is precisely
+the paper's scratchpad-reuse argument (weights resident, activations
+streamed).  Fused epilogue (bias/activation/GLU) matches the main
+``cute_matmul`` kernel so MoE experts get the same matrix–vector overlap.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.fusion import Epilogue, EpilogueOperands, apply_epilogue
+
+
+def grouped_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, ep: Epilogue,
+                          n_k: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[0]
+    if ep.glu:
+        w = w.reshape(w.shape[0], -1)
+    acc_ref[...] += jnp.dot(x_ref[0], w,
+                            preferred_element_type=acc_ref.dtype)
+
+    @pl.when(k == n_k - 1)
+    def _done():
+        o_ref[0] = apply_epilogue(acc_ref[...], ep, EpilogueOperands())

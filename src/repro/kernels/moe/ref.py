@@ -1,0 +1,17 @@
+"""einsum oracle for the grouped MoE GEMM."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.fusion import Epilogue, EpilogueOperands, apply_epilogue
+
+
+def grouped_matmul_ref(x, w, *, epilogue: Epilogue = Epilogue(),
+                       accum_dtype=jnp.float32):
+    """x: (E, C, K); w: (E, K, N) or (E, K, 2, N/2) under GLU."""
+    if w.ndim == 4:
+        w = w.reshape(w.shape[0], w.shape[1], -1)
+    acc = jnp.einsum("eck,ekn->ecn", x, w,
+                     preferred_element_type=accum_dtype)
+    return apply_epilogue(acc, epilogue, EpilogueOperands())

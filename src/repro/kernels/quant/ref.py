@@ -1,0 +1,34 @@
+"""jnp oracle for quantization + SmoothQuant scale migration."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_rowwise_ref(x):
+    """x: (..., M, K) -> (q int8, scale f32 (..., M))."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[..., 0]
+
+
+def quantize_colwise_ref(w):
+    """Static per-output-channel weight quant: w (K, N) -> (q, scale (N,))."""
+    wf = w.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(wf), axis=0, keepdims=True)
+    scale = jnp.where(absmax == 0.0, 1.0, absmax / 127.0)
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return q, scale[0]
+
+
+def smoothquant_migrate(x_absmax, w_absmax, alpha: float = 0.5):
+    """SmoothQuant §4: s_j = max|X_j|^α / max|W_j|^(1-α) (per in-channel).
+
+    Activations are divided by ``s``, weights multiplied — difficulty
+    migrates from activations to weights.  O1 applies this offline.
+    """
+    s = jnp.power(jnp.maximum(x_absmax, 1e-5), alpha) / jnp.power(
+        jnp.maximum(w_absmax, 1e-5), 1.0 - alpha)
+    return jnp.maximum(s, 1e-5)

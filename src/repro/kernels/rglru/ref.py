@@ -1,0 +1,33 @@
+"""lax.scan oracle for the RG-LRU recurrence (also the decode step)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_ref(log_a, x, initial_state=None):
+    """log_a, x: (B, T, C) -> (h_seq (B, T, C), final_state (B, C))."""
+    b, t, c = x.shape
+    if initial_state is None:
+        initial_state = jnp.zeros((b, c), jnp.float32)
+
+    def step(h, inp):
+        la_t, x_t = inp
+        a_t = jnp.exp(la_t)
+        beta = jnp.sqrt(-jnp.expm1(2.0 * la_t))
+        h = a_t * h + beta * x_t
+        return h, h
+
+    xs = (jnp.moveaxis(log_a.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(x.astype(jnp.float32), 1, 0))
+    final, hs = jax.lax.scan(step, initial_state, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), final
+
+
+def rglru_decode_step(state, log_a, x):
+    """One-token step: state (B, C), log_a/x (B, C) -> (out, new_state)."""
+    a = jnp.exp(log_a.astype(jnp.float32))
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a.astype(jnp.float32)))
+    new = a * state + beta * x.astype(jnp.float32)
+    return new.astype(x.dtype), new

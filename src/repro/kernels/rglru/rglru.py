@@ -1,0 +1,44 @@
+"""RG-LRU (Griffin / RecurrentGemma) gated linear recurrence kernel.
+
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ x_t,   a_t = exp(log_a_t) ≤ 1
+
+``log_a`` and the gated input are computed by the surrounding block
+(matmuls through ``cute_matmul``); the kernel is the pure recurrence —
+vector-unit work in the paper's taxonomy, overlapped with the
+projection GEMMs at the layer level (DESIGN.md §4).
+
+Channels are independent, so the grid parallelises (batch × channel
+blocks) and walks chunks of time sequentially with the carry in VMEM.
+Inside a chunk a ``fori_loop`` runs the exact recurrence (L small); a
+production variant would use the associative-scan form.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def rglru_kernel(log_a_ref, x_ref, o_ref, h_ref, *, chunk: int):
+    t0 = pl.program_id(2)
+
+    @pl.when(t0 == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    log_a = log_a_ref[0].astype(jnp.float32)      # (L, bc)
+    x = x_ref[0].astype(jnp.float32)              # (L, bc)
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably: 1 - exp(2·log_a) via expm1.
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    gated = beta * x
+
+    def body(t, h):
+        h = a[t] * h + gated[t]
+        pl.store(o_ref, (0, pl.dslice(t, 1), slice(None)),
+                 h[None].astype(o_ref.dtype))
+        return h
+
+    h_final = jax.lax.fori_loop(0, chunk, body, h_ref[0, :])
+    h_ref[0, :] = h_final

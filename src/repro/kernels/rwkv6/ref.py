@@ -1,0 +1,28 @@
+"""Naive per-token scan oracle for RWKV-6 WKV."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_ref(r, k, v, lw, u, initial_state=None):
+    """r/k/v/lw: (B, H, T, C); u: (H, C).  Returns (o, final_state).
+
+    o: (B, H, T, C); state: (B, H, C, C) with S[c_k, c_v] layout.
+    """
+    b, h, t, c = r.shape
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, c, c), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp                      # (B, H, C) each
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (B, H, C, C)
+        s_eff = s + u[None, :, :, None] * kv
+        o_t = jnp.einsum("bhc,bhcd->bhd", r_t, s_eff)
+        s = jnp.exp(lw_t)[..., :, None] * s + kv
+        return s, o_t
+
+    xs = tuple(jnp.moveaxis(x.astype(jnp.float32), 2, 0) for x in (r, k, v, lw))
+    final, o = jax.lax.scan(step, initial_state, xs)
+    return jnp.moveaxis(o, 0, 2).astype(r.dtype), final

@@ -1,0 +1,275 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede any jax-importing import: jax locks the device count at
+# first backend init.  Everything else in the framework sees 1 device.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds abstract (ShapeDtypeStruct) parameters,
+optimizer state, batch and caches with their production shardings,
+lowers the appropriate step function (train_step / prefill / decode) on
+the 16×16 single-pod and 2×16×16 multi-pod meshes, compiles it, and
+records ``memory_analysis()``, ``cost_analysis()`` and per-collective
+byte counts into ``benchmarks/results/dryrun/<mesh>/<arch>__<shape>.json``
+— the §Roofline tables read these files.
+
+Usage:
+    python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k
+    python -m repro.launch.dryrun --all [--jobs 4] [--force]
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.registry import (ALL_ARCHS, SHAPES, all_cells,
+                                    cell_applicable, get_config, input_specs)
+from repro.core import hlo_cost
+from repro.core import roofline as rl
+from repro.distributed import logical, sharding
+from repro.launch.mesh import make_production_mesh
+from repro.models.base import family_module
+from repro.training.train_step import TrainConfig, abstract_state, \
+    make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+#: per-cell runtime overrides discovered during §Perf iterations; the
+#: baseline run uses an empty dict (see benchmarks/roofline.py for both).
+PERF_OVERRIDES: dict = {}
+
+
+def _result_path(mesh_name: str, arch: str, shape: str, tag: str = "") -> str:
+    d = os.path.join(os.path.abspath(RESULTS_DIR), mesh_name + tag)
+    os.makedirs(d, exist_ok=True)
+    return os.path.join(d, f"{arch}__{shape}.json")
+
+
+def default_train_config(cfg, spec, mesh) -> TrainConfig:
+    """Pick microbatches so the layer-scan carry stays ≲ 4 GiB/device.
+
+    The scan-over-layers checkpoint saves one residual-stream tensor per
+    layer: B_local × S × d_model × 2 bytes × n_layers.  Gradient
+    accumulation divides B_local.
+    """
+    data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    b_local = max(spec.global_batch // data, 1)
+    carry = b_local * spec.seq_len * cfg.d_model * 2 * cfg.n_layers
+    target = 4 * (1 << 30)
+    mb = 1
+    while mb < b_local and carry / mb > target:
+        mb *= 2
+    return TrainConfig(microbatches=mb)
+
+
+def build_cell(cfg, shape_name: str, mesh, rules=None,
+               tcfg: TrainConfig = None):
+    """Returns (fn, sharded abstract args) for one cell."""
+    spec = SHAPES[shape_name]
+    mod = family_module(cfg)
+    tcfg = tcfg or default_train_config(cfg, spec, mesh)
+    batch = input_specs(cfg, spec)
+    batch = sharding.apply_shardings(
+        batch, sharding.batch_shardings(batch, mesh, rules))
+    params, opt_state = abstract_state(cfg, tcfg)
+    pshard = sharding.param_shardings(params, mesh, rules)
+    params = sharding.apply_shardings(params, pshard)
+
+    if spec.mode == "train":
+        opt_shard = {
+            "step": sharding.param_shardings(opt_state["step"], mesh, rules),
+            "mu": sharding.param_shardings(opt_state["mu"], mesh, rules),
+            "nu": sharding.param_shardings(opt_state["nu"], mesh, rules),
+            "master": sharding.param_shardings(opt_state["master"], mesh,
+                                               rules),
+        }
+        opt_state = sharding.apply_shardings(opt_state, opt_shard)
+        step = make_train_step(cfg, tcfg)
+        if tcfg.grad_compression:
+            residual = jax.eval_shape(
+                lambda p: jax.tree.map(
+                    lambda x: jax.numpy.zeros(x.shape, jax.numpy.float32),
+                    p), params)
+            residual = sharding.apply_shardings(
+                residual, sharding.param_shardings(residual, mesh, rules))
+            fn = lambda p, o, b, r: step(p, o, b, r)[:3]
+            return fn, (params, opt_state, batch, residual)
+        fn = lambda p, o, b: step(p, o, b)[:3]
+        return fn, (params, opt_state, batch)
+
+    if spec.mode == "prefill":
+        cache = jax.eval_shape(
+            lambda: mod.init_cache(cfg, spec.global_batch, spec.seq_len))
+        cache = sharding.apply_shardings(
+            cache, sharding.cache_shardings(cache, mesh, cfg, rules))
+        fn = lambda p, b, c: mod.prefill(cfg, p, b, c)
+        return fn, (params, batch, cache)
+
+    # decode
+    cache = jax.eval_shape(
+        lambda: mod.init_cache(cfg, spec.global_batch, spec.seq_len))
+    cache = sharding.apply_shardings(
+        cache, sharding.cache_shardings(cache, mesh, cfg, rules))
+    pos = jax.ShapeDtypeStruct((), jax.numpy.int32)
+    fn = lambda p, t, c, pp: mod.decode_step(cfg, p, t, c, pp)
+    return fn, (params, batch["tokens"], cache, pos)
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); D per mode."""
+    spec = SHAPES[shape_name]
+    n = cfg.param_count(active_only=cfg.moe is not None)
+    d_tokens = spec.global_batch * (1 if spec.mode == "decode"
+                                    else spec.seq_len)
+    mult = 6.0 if spec.mode == "train" else 2.0
+    return mult * n * d_tokens
+
+
+def run_cell(arch: str, shape: str, mesh_name: str, force: bool = False,
+             rules=None, overrides=None, tag: str = "",
+             tcfg: TrainConfig = None) -> dict:
+    out_path = _result_path(mesh_name, arch, shape, tag)
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch, **(overrides or {}))
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = mesh.size
+    t0 = time.time()
+    with logical.use_rules(mesh, rules):
+        fn, args = build_cell(cfg, shape, mesh, rules, tcfg)
+        lowered = jax.jit(fn).lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    cost = hlo_cost.analyze(hlo)     # trip-count-aware (DESIGN.md §3)
+    mf = model_flops(cfg, shape)
+    roof = rl.Roofline(
+        flops_per_chip=cost.flops,
+        bytes_per_chip=cost.bytes,
+        coll_bytes_per_chip=cost.collective_bytes,
+        chips=chips,
+        model_flops_per_chip=mf / chips,
+    )
+    result = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "chips": chips,
+        "mode": SHAPES[shape].mode,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "cost_analysis": {k: float(v) for k, v in ca.items()
+                          if isinstance(v, (int, float))},
+        "memory": {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "code_bytes": getattr(ma, "generated_code_size_in_bytes", None),
+        },
+        "collective_bytes": dict(cost.per_collective,
+                                 total=cost.collective_bytes),
+        "unparsed_loops": cost.unparsed_loops,
+        "model_flops_total": mf,
+        "roofline": roof.as_dict(),
+        "hlo_bytes": len(hlo),
+    }
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def _run_all(args):
+    cells = []
+    for arch, shape in all_cells():
+        for mesh_name in args.meshes:
+            cells.append((arch, shape, mesh_name))
+    print(f"dry-run: {len(cells)} cells", flush=True)
+    procs, failures, done = [], [], 0
+    for arch, shape, mesh_name in cells:
+        if os.path.exists(_result_path(mesh_name, arch, shape)) \
+                and not args.force:
+            done += 1
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh_name]
+        if args.force:
+            cmd.append("--force")
+        procs.append(((arch, shape, mesh_name),
+                      subprocess.Popen(cmd)))
+        while len(procs) >= args.jobs:
+            procs, f, d = _reap(procs)
+            failures += f
+            done += d
+            time.sleep(0.5)
+    while procs:
+        procs, f, d = _reap(procs)
+        failures += f
+        done += d
+        time.sleep(0.5)
+    print(f"dry-run complete: {done} ok, {len(failures)} failed")
+    for cell in failures:
+        print("  FAILED:", cell)
+    return 1 if failures else 0
+
+
+def _reap(procs):
+    live, failures, done = [], [], 0
+    for cell, p in procs:
+        rc = p.poll()
+        if rc is None:
+            live.append((cell, p))
+        elif rc == 0:
+            done += 1
+            print("  ok:", cell, flush=True)
+        else:
+            failures.append(cell)
+            print("  FAIL:", cell, flush=True)
+    return live, failures, done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--meshes", nargs="+", default=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--jobs", type=int, default=2)
+    args = ap.parse_args()
+
+    if args.all:
+        sys.exit(_run_all(args))
+
+    if not (args.arch and args.shape):
+        ap.error("--arch/--shape required unless --all")
+    if not cell_applicable(args.arch, args.shape):
+        print(f"SKIP (inapplicable): {args.arch} x {args.shape}")
+        return
+    try:
+        r = run_cell(args.arch, args.shape, args.mesh, force=args.force)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+    roof = r["roofline"]
+    print(f"{args.arch} x {args.shape} x {args.mesh}: "
+          f"compile={r['compile_s']}s "
+          f"compute={roof['compute_s']:.2e}s memory={roof['memory_s']:.2e}s "
+          f"collective={roof['collective_s']:.2e}s "
+          f"dominant={roof['dominant']} "
+          f"roofline_frac={roof['roofline_fraction']:.3f} "
+          f"temp={r['memory']['temp_bytes']}")
+
+
+if __name__ == "__main__":
+    main()

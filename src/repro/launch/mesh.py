@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never
+touches jax device state.  Single pod: 16×16 = 256 chips (data, model);
+multi-pod: 2×16×16 = 512 chips with an explicit "pod" axis that the
+default sharding rules fold into data parallelism (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model: int = 1):
+    """Debug mesh over whatever devices exist (tests / examples)."""
+    n = jax.device_count()
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,318 @@
+"""RWKV-6 (Finch) — attention-free SSM family.
+
+Faithful block structure (arXiv:2404.05892):
+  * Time-mix: token-shift DDLerp (shared low-rank W1 + per-target W2)
+    produces r/k/v/g/w mixes; data-dependent decay via a decay LoRA;
+    the WKV recurrence (kernels/rwkv6); per-head GroupNorm; SiLU gate;
+    output projection.
+  * Channel-mix: token-shift lerp, squared-ReLU FFN with a sigmoid
+    receptance gate.
+
+Paper applicability (DESIGN.md §4): the recurrence is vector work — all
+projections still flow through ``cute_matmul``; the chunked WKV turns
+the state update into MXU-sized outer products.
+
+The XLA (distributed/dry-run) path uses ``rwkv6_chunked_jnp`` — the same
+chunked math as the Pallas kernel in pure jnp under ``lax.scan`` so
+cost_analysis sees its FLOPs; the Pallas kernel is selected by
+``cfg.backend == 'pallas'``.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import linear
+from repro.distributed.logical import constrain
+from repro.models import common as cm
+from repro.models.base import ArchConfig, register_family
+
+_N_MIX = 5     # r, k, v, g, w
+
+
+# ---------------------------------------------------------------------------
+# Chunked WKV in pure jnp (shared math with the Pallas kernel).
+# ---------------------------------------------------------------------------
+
+def rwkv6_chunked_jnp(r, k, v, lw, u, *, chunk: int = 64,
+                      initial_state=None):
+    """r/k/v/lw: (B, H, T, C); u: (H, C) -> (o, final_state)."""
+    b, h, t, c = r.shape
+    pad = (-t) % chunk
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        r, k, v, lw = (jnp.pad(x, widths) for x in (r, k, v, lw))
+    tp = t + pad
+    n = tp // chunk
+
+    def to_chunks(x):
+        return jnp.moveaxis(
+            x.astype(jnp.float32).reshape(b, h, n, chunk, c), 2, 0)
+
+    rc, kc, vc, lwc = map(to_chunks, (r, k, v, lw))
+    mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+
+    def body(state, inp):
+        rr, kk, vv, ww = inp                      # (B, H, L, C)
+        la = jnp.cumsum(ww, axis=2)
+        la_prev = la - ww
+        q_t = rr * jnp.exp(la_prev)
+        o = jnp.einsum("bhlc,bhcd->bhld", q_t, state)
+        diff = la_prev[:, :, :, None, :] - la[:, :, None, :, :]
+        pair = (rr[:, :, :, None, :] * kk[:, :, None, :, :]
+                * jnp.exp(jnp.where(mask[None, None, :, :, None],
+                                    diff, -1e30)))
+        p = jnp.sum(pair, axis=-1)                # (B, H, L, L)
+        o = o + jnp.einsum("bhls,bhsd->bhld", p, vv)
+        o = o + jnp.sum(rr * u[None, :, None, :] * kk, axis=-1,
+                        keepdims=True) * vv
+        la_last = la[:, :, -1:, :]
+        k_scaled = kk * jnp.exp(la_last - la)
+        state = (jnp.exp(la_last[:, :, 0, :])[..., None] * state
+                 + jnp.einsum("bhlc,bhld->bhcd", k_scaled, vv))
+        return state, o
+
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, c, c), jnp.float32)
+    state, o = jax.lax.scan(body, initial_state, (rc, kc, vc, lwc))
+    o = jnp.moveaxis(o, 0, 2).reshape(b, h, tp, c)[:, :, :t]
+    return o.astype(r.dtype), state
+
+
+def _wkv(cfg: ArchConfig, r, k, v, lw, u):
+    if cfg.backend == "pallas":
+        from repro.kernels.rwkv6.ops import rwkv6_scan
+        return rwkv6_scan(r, k, v, lw, u, chunk=32)
+    if cfg.backend == "dense":
+        from repro.kernels.rwkv6.ref import rwkv6_ref
+        return rwkv6_ref(r, k, v, lw, u)[0]
+    return rwkv6_chunked_jnp(r, k, v, lw, u)[0]
+
+
+# ---------------------------------------------------------------------------
+# Parameters.
+# ---------------------------------------------------------------------------
+
+def _layer_init(cfg: ArchConfig, key):
+    d, rw = cfg.d_model, cfg.rwkv
+    ks = jax.random.split(key, 16)
+    dt = cfg.dtype
+    p = {
+        "ln1": jnp.ones((d,), dt), "ln1_b": jnp.zeros((d,), dt),
+        "ln2": jnp.ones((d,), dt), "ln2_b": jnp.zeros((d,), dt),
+        # DDLerp token-shift mixes.
+        "mu_x": (jax.random.uniform(ks[0], (d,)) * 0.5).astype(dt),
+        "mu_rkvgw": (jax.random.uniform(ks[1], (_N_MIX, d)) * 0.5).astype(dt),
+        "mix_w1": cm.dense_init(ks[2], (d, _N_MIX * rw.lora_mix), dt),
+        "mix_w2": (jax.random.normal(ks[3], (_N_MIX, rw.lora_mix, d))
+                   * 0.01).astype(dt),
+        # Time-mix projections.
+        "w_r": cm.dense_init(ks[4], (d, d), dt),
+        "w_k": cm.dense_init(ks[5], (d, d), dt),
+        "w_v": cm.dense_init(ks[6], (d, d), dt),
+        "w_g": cm.dense_init(ks[7], (d, d), dt),
+        "w_o": cm.dense_init(ks[8], (d, d), dt),
+        # Data-dependent decay LoRA + per-channel bases.
+        "w0": (jax.random.uniform(ks[9], (d,)) * 2.0 - 2.0).astype(jnp.float32),
+        "decay_w1": cm.dense_init(ks[10], (d, rw.lora_decay), dt),
+        "decay_w2": (jax.random.normal(ks[11], (rw.lora_decay, d))
+                     * 0.01).astype(dt),
+        "u": (jax.random.normal(ks[12], (d // rw.head_size, rw.head_size))
+              * 0.3).astype(jnp.float32),
+        "ln_x": jnp.ones((d,), dt), "ln_x_b": jnp.zeros((d,), dt),
+        # Channel mix.
+        "mu_cm_k": (jax.random.uniform(ks[13], (d,)) * 0.5).astype(dt),
+        "mu_cm_r": (jax.random.uniform(ks[13], (d,)) * 0.5).astype(dt),
+        "w_cm_k": cm.dense_init(ks[14], (d, cfg.d_ff), dt),
+        "w_cm_v": cm.dense_init(ks[15], (cfg.d_ff, d), dt, in_axis=1),
+        "w_cm_r": cm.dense_init(ks[9], (d, d), dt),
+    }
+    return p
+
+
+def init(cfg: ArchConfig, key):
+    ks = jax.random.split(key, 4)
+    v = cfg.padded_vocab
+    layer_keys = jax.random.split(ks[2], cfg.n_layers)
+    return {
+        "embedding": cm.embed_init(ks[0], (v, cfg.d_model), cfg.dtype),
+        "lm_head": cm.dense_init(ks[1], (cfg.d_model, v), cfg.dtype),
+        "ln_in": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln_in_b": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "ln_final": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln_final_b": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "layers": jax.vmap(lambda k: _layer_init(cfg, k))(layer_keys),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block application.
+# ---------------------------------------------------------------------------
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros or carried state at t=0)."""
+    pad = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def time_mix(cfg: ArchConfig, p, x, shift_state=None, wkv_state=None):
+    b, t, d = x.shape
+    rw = cfg.rwkv
+    h = d // rw.head_size
+    xx = _shift(x, shift_state) - x
+    xxx = x + xx * p["mu_x"]
+    mix = jnp.tanh(linear(xxx, p["mix_w1"]))            # (B, T, 5*r)
+    mix = mix.reshape(b, t, _N_MIX, rw.lora_mix)
+    dyn = jnp.einsum("btnr,nrd->btnd", mix, p["mix_w2"])
+    mixed = x[:, :, None, :] + xx[:, :, None, :] * (
+        p["mu_rkvgw"][None, None] + dyn)                # (B, T, 5, d)
+    x_r, x_k, x_v, x_g, x_w = (mixed[:, :, i] for i in range(_N_MIX))
+
+    r = linear(x_r, p["w_r"])
+    k = linear(x_k, p["w_k"])
+    v = linear(x_v, p["w_v"])
+    g = linear(x_g, p["w_g"], activation="silu")
+    w_dyn = jnp.tanh(linear(x_w, p["decay_w1"])) @ p["decay_w2"]
+    lw = -jnp.exp(jnp.clip(p["w0"][None, None].astype(jnp.float32)
+                           + w_dyn.astype(jnp.float32), -8.0, 6.0))
+
+    def heads(z):
+        return z.reshape(b, t, h, rw.head_size).transpose(0, 2, 1, 3)
+
+    o = _wkv(cfg, heads(r), heads(k), heads(v), heads(lw), p["u"])
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    o = cm.groupnorm_heads(o, p["ln_x"], p["ln_x_b"], h)
+    out = linear(o * g, p["w_o"])
+    return constrain(out, ("batch", "seq", "embed")), x[:, -1]
+
+
+def channel_mix(cfg: ArchConfig, p, x, shift_state=None):
+    xx = _shift(x, shift_state) - x
+    x_k = x + xx * p["mu_cm_k"]
+    x_r = x + xx * p["mu_cm_r"]
+    k = linear(x_k, p["w_cm_k"], activation="relu2")
+    kv = linear(k, p["w_cm_v"])
+    return jax.nn.sigmoid(linear(x_r, p["w_cm_r"]).astype(jnp.float32)
+                          ).astype(x.dtype) * kv, x[:, -1]
+
+
+def block_apply(cfg: ArchConfig, p, x):
+    h = cm.layernorm(x, p["ln1"], p["ln1_b"])
+    tm, _ = time_mix(cfg, p, h)
+    x = x + tm
+    h = cm.layernorm(x, p["ln2"], p["ln2_b"])
+    cmix, _ = channel_mix(cfg, p, h)
+    return x + cmix
+
+
+def forward(cfg: ArchConfig, params, batch, return_hidden: bool = False):
+    x = cm.embed_tokens(cfg, params["embedding"], batch["tokens"])
+    x = cm.layernorm(x, params["ln_in"], params["ln_in_b"])
+
+    def body(carry, lp):
+        return block_apply(cfg, lp, carry), None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=cm.remat_policy(cfg),
+                              prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = cm.layernorm(x, params["ln_final"], params["ln_final_b"])
+    if return_hidden:
+        return x
+    return cm.logits_out(cfg, params, x)
+
+
+# ---------------------------------------------------------------------------
+# Serving: state = per-layer (tm_shift, cm_shift, wkv_state).
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int, dtype=None):
+    del max_len                                   # state is O(1) in context
+    d, rw = cfg.d_model, cfg.rwkv
+    h = d // rw.head_size
+    dt = dtype or cfg.dtype
+    n = cfg.n_layers
+    return {
+        "tm_shift": jnp.zeros((n, batch_size, d), dt),
+        "cm_shift": jnp.zeros((n, batch_size, d), dt),
+        "wkv": jnp.zeros((n, batch_size, h, rw.head_size, rw.head_size),
+                         jnp.float32),
+    }
+
+
+def _stateful_block(cfg, lp, x, tm_s, cm_s, wkv_s):
+    """Single-step (or chunk) block with explicit state; T small."""
+    b, t, d = x.shape
+    rw = cfg.rwkv
+    h = d // rw.head_size
+    hh = cm.layernorm(x, lp["ln1"], lp["ln1_b"])
+    xx = _shift(hh, tm_s) - hh
+    xxx = hh + xx * lp["mu_x"]
+    mix = jnp.tanh(linear(xxx, lp["mix_w1"])).reshape(
+        b, t, _N_MIX, rw.lora_mix)
+    dyn = jnp.einsum("btnr,nrd->btnd", mix, lp["mix_w2"])
+    mixed = hh[:, :, None, :] + xx[:, :, None, :] * (
+        lp["mu_rkvgw"][None, None] + dyn)
+    x_r, x_k, x_v, x_g, x_w = (mixed[:, :, i] for i in range(_N_MIX))
+    r = linear(x_r, lp["w_r"])
+    k = linear(x_k, lp["w_k"])
+    v = linear(x_v, lp["w_v"])
+    g = linear(x_g, lp["w_g"], activation="silu")
+    w_dyn = jnp.tanh(linear(x_w, lp["decay_w1"])) @ lp["decay_w2"]
+    lw = -jnp.exp(jnp.clip(lp["w0"][None, None].astype(jnp.float32)
+                           + w_dyn.astype(jnp.float32), -8.0, 6.0))
+
+    def heads(z):
+        return z.reshape(b, t, h, rw.head_size).transpose(0, 2, 1, 3)
+
+    if t > 1:      # prefill: chunked form (MXU-friendly, compact HLO)
+        o, wkv_new = rwkv6_chunked_jnp(heads(r), heads(k), heads(v),
+                                       heads(lw), lp["u"],
+                                       initial_state=wkv_s)
+    else:          # decode: exact single-step recurrence
+        from repro.kernels.rwkv6.ref import rwkv6_ref
+        o, wkv_new = rwkv6_ref(heads(r), heads(k), heads(v), heads(lw),
+                               lp["u"], initial_state=wkv_s)
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    o = cm.groupnorm_heads(o, lp["ln_x"], lp["ln_x_b"], h)
+    x = x + linear(o * g, lp["w_o"])
+    tm_new = hh[:, -1]
+
+    hh = cm.layernorm(x, lp["ln2"], lp["ln2_b"])
+    cmix, cm_new = channel_mix(cfg, lp, hh, cm_s)
+    return x + cmix, tm_new, cm_new, wkv_new
+
+
+def _run_stateful(cfg, params, tokens, cache):
+    x = cm.embed_tokens(cfg, params["embedding"], tokens)
+    x = cm.layernorm(x, params["ln_in"], params["ln_in_b"])
+
+    def body(carry, layer):
+        x = carry
+        lp, tm_s, cm_s, wkv_s = layer
+        x, tm, cms, wkv = _stateful_block(cfg, lp, x, tm_s, cm_s, wkv_s)
+        return x, (tm, cms, wkv)
+
+    x, (tm, cms, wkv) = jax.lax.scan(
+        body, x, (params["layers"], cache["tm_shift"], cache["cm_shift"],
+                  cache["wkv"]))
+    new_cache = {"tm_shift": tm.astype(cache["tm_shift"].dtype),
+                 "cm_shift": cms.astype(cache["cm_shift"].dtype),
+                 "wkv": wkv}
+    x = cm.layernorm(x, params["ln_final"], params["ln_final_b"])
+    return cm.logits_out(cfg, params, x[:, -1]), new_cache
+
+
+def prefill(cfg: ArchConfig, params, batch, cache):
+    return _run_stateful(cfg, params, batch["tokens"], cache)
+
+
+def decode_step(cfg: ArchConfig, params, tokens, cache, pos):
+    del pos                                        # state carries position
+    return _run_stateful(cfg, params, tokens, cache)
+
+
+register_family("rwkv6")(sys.modules[__name__])

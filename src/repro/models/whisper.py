@@ -1,0 +1,214 @@
+"""Whisper-tiny encoder-decoder (audio) — backbone only, conv stub.
+
+Per the assignment, the conv frontend is a STUB: ``input_specs()``
+supplies precomputed frame embeddings (B, n_audio_ctx, d) in place of
+mel → conv1d×2 → GELU.  The backbone is faithful Whisper: pre-LN
+transformer, learned positional embeddings, encoder bidirectional,
+decoder causal self-attention + cross-attention, tied output embedding.
+
+Serving: prefill precomputes the encoder once and caches per-layer
+cross-attention K/V (the paper's "weights resident in scratchpad" reuse
+pattern at serving scale, DESIGN.md §4); decode appends to the causal
+self-attention cache.
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import linear
+from repro.models import common as cm
+from repro.models.base import ArchConfig, register_family
+
+
+def _attn_block_init(cfg, key, cross: bool):
+    ks = jax.random.split(key, 3)
+    p = {
+        "attn": cm.attn_init(cfg, ks[0]),
+        "ln": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln_b": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if cross:
+        p["cross"] = cm.attn_init(cfg, ks[1])
+        p["ln_cross"] = jnp.ones((cfg.d_model,), cfg.dtype)
+        p["ln_cross_b"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    p["mlp"] = cm.mlp_init(cfg, ks[2])
+    p["ln_mlp"] = jnp.ones((cfg.d_model,), cfg.dtype)
+    p["ln_mlp_b"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    return p
+
+
+def init(cfg: ArchConfig, key):
+    ed = cfg.encdec
+    ks = jax.random.split(key, 8)
+    v = cfg.padded_vocab
+    enc_keys = jax.random.split(ks[2], ed.n_encoder_layers)
+    dec_keys = jax.random.split(ks[3], cfg.n_layers)
+    return {
+        "embedding": cm.embed_init(ks[0], (v, cfg.d_model), cfg.dtype),
+        "pos_dec": cm.embed_init(ks[1], (ed.max_positions, cfg.d_model),
+                                 cfg.dtype),
+        "pos_enc": cm.embed_init(ks[4], (ed.n_audio_ctx, cfg.d_model),
+                                 cfg.dtype),
+        "enc_layers": jax.vmap(
+            lambda k: _attn_block_init(cfg, k, cross=False))(enc_keys),
+        "dec_layers": jax.vmap(
+            lambda k: _attn_block_init(cfg, k, cross=True))(dec_keys),
+        "ln_enc_final": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln_enc_final_b": jnp.zeros((cfg.d_model,), cfg.dtype),
+        "ln_final": jnp.ones((cfg.d_model,), cfg.dtype),
+        "ln_final_b": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+
+
+def encode(cfg: ArchConfig, params, audio_embeds):
+    """audio_embeds: (B, Ta, d) — stub conv output."""
+    x = audio_embeds.astype(cfg.dtype)
+    x = x + params["pos_enc"][None, : x.shape[1]]
+
+    def body(carry, lp):
+        x = carry
+        h = cm.layernorm(x, lp["ln"], lp["ln_b"])
+        q, k, v = cm.qkv_project(cfg, lp["attn"], h, None)
+        ctx = cm.attention(cfg, q, k, v, causal=False)
+        x = x + cm.attn_out(cfg, lp["attn"], ctx)
+        h = cm.layernorm(x, lp["ln_mlp"], lp["ln_mlp_b"])
+        x = x + cm.mlp_apply(cfg, lp["mlp"], h)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=cm.remat_policy(cfg),
+                              prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return cm.layernorm(x, params["ln_enc_final"], params["ln_enc_final_b"])
+
+
+def _dec_block(cfg, lp, x, positions, enc_out=None, cross_kv=None,
+               self_kv=None, cache_pos=None):
+    h = cm.layernorm(x, lp["ln"], lp["ln_b"])
+    q, k, v = cm.qkv_project(cfg, lp["attn"], h, None)
+    new_self = None
+    if self_kv is not None:
+        k_c, v_c = cm.cache_update(self_kv[0], self_kv[1], k, v, cache_pos)
+        new_self = (k_c, v_c)
+        if q.shape[2] == 1:
+            from repro.kernels.attention.ops import decode_attention
+            ctx = decode_attention(q, k_c, v_c, cache_pos + 1,
+                                   sm_scale=cfg.sm_scale)
+        else:
+            ctx = cm.attention(cfg, q, k, v, causal=True)
+    else:
+        ctx = cm.attention(cfg, q, k, v, causal=True)
+    x = x + cm.attn_out(cfg, lp["attn"], ctx)
+
+    h = cm.layernorm(x, lp["ln_cross"], lp["ln_cross_b"])
+    qc = linear(h, lp["cross"]["wq"]).reshape(
+        h.shape[0], h.shape[1], cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+    if cross_kv is not None:
+        kc, vc = cross_kv
+    else:
+        kc = linear(enc_out, lp["cross"]["wk"]).reshape(
+            enc_out.shape[0], -1, cfg.n_kv_heads,
+            cfg.head_dim).transpose(0, 2, 1, 3)
+        vc = linear(enc_out, lp["cross"]["wv"]).reshape(
+            enc_out.shape[0], -1, cfg.n_kv_heads,
+            cfg.head_dim).transpose(0, 2, 1, 3)
+    ctx = cm.attention(cfg, qc, kc, vc, causal=False)
+    x = x + cm.attn_out(cfg, lp["cross"], ctx)
+
+    h = cm.layernorm(x, lp["ln_mlp"], lp["ln_mlp_b"])
+    x = x + cm.mlp_apply(cfg, lp["mlp"], h)
+    return x, new_self, (kc, vc)
+
+
+def _decode_stack(cfg, params, x, positions, enc_out=None, caches=None,
+                  cache_pos=None):
+    def body(carry, layer):
+        x = carry
+        if caches is not None:
+            lp, self_kv, cross_kv = layer
+            x, new_self, _ = _dec_block(cfg, lp, x, positions,
+                                        cross_kv=cross_kv, self_kv=self_kv,
+                                        cache_pos=cache_pos)
+            return x, (new_self, cross_kv)
+        lp = layer
+        x, _, _ = _dec_block(cfg, lp, x, positions, enc_out=enc_out)
+        return x, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body, policy=cm.remat_policy(cfg),
+                              prevent_cse=False)
+    xs = ((params["dec_layers"], caches["self"], caches["cross"])
+          if caches is not None else params["dec_layers"])
+    x, ys = jax.lax.scan(body, x, xs)
+    return x, ys
+
+
+def forward(cfg: ArchConfig, params, batch, return_hidden: bool = False):
+    """batch: tokens (B, S) + audio_embeds (B, Ta, d)."""
+    enc_out = encode(cfg, params, batch["audio_embeds"])
+    tokens = batch["tokens"]
+    x = cm.embed_tokens(cfg, params["embedding"], tokens)
+    x = x + params["pos_dec"][None, : x.shape[1]]
+    x, _ = _decode_stack(cfg, params, x, None, enc_out=enc_out)
+    x = cm.layernorm(x, params["ln_final"], params["ln_final_b"])
+    if return_hidden:
+        return x
+    return cm.logits_out(cfg, params, x)
+
+
+def init_cache(cfg: ArchConfig, batch_size: int, max_len: int, dtype=None):
+    dtype = dtype or cfg.kv_cache_dtype
+    n, ed = cfg.n_layers, cfg.encdec
+    self_shape = (n, batch_size, cfg.n_kv_heads, max_len, cfg.head_dim)
+    cross_shape = (n, batch_size, cfg.n_kv_heads, ed.n_audio_ctx,
+                   cfg.head_dim)
+    return {"self": (jnp.zeros(self_shape, dtype),
+                     jnp.zeros(self_shape, dtype)),
+            "cross": (jnp.zeros(cross_shape, dtype),
+                      jnp.zeros(cross_shape, dtype))}
+
+
+def prefill(cfg: ArchConfig, params, batch, cache):
+    """Encode audio, cache cross-KV, run the decoder prompt."""
+    enc_out = encode(cfg, params, batch["audio_embeds"])
+
+    # Cross-attention K/V per decoder layer (vmapped over the layer stack).
+    def cross_kv(lp):
+        k = linear(enc_out, lp["cross"]["wk"]).reshape(
+            enc_out.shape[0], -1, cfg.n_kv_heads,
+            cfg.head_dim).transpose(0, 2, 1, 3)
+        v = linear(enc_out, lp["cross"]["wv"]).reshape(
+            enc_out.shape[0], -1, cfg.n_kv_heads,
+            cfg.head_dim).transpose(0, 2, 1, 3)
+        return k.astype(cache["cross"][0].dtype), v.astype(
+            cache["cross"][1].dtype)
+
+    kc, vc = jax.vmap(cross_kv)(params["dec_layers"])
+    cache = dict(cache)
+    cache["cross"] = (kc, vc)
+
+    tokens = batch["tokens"]
+    x = cm.embed_tokens(cfg, params["embedding"], tokens)
+    x = x + params["pos_dec"][None, : x.shape[1]]
+    x, ys = _decode_stack(cfg, params, x, None, caches=cache, cache_pos=0)
+    new_self, _ = ys
+    x = cm.layernorm(x, params["ln_final"], params["ln_final_b"])
+    return (cm.logits_out(cfg, params, x[:, -1]),
+            {"self": new_self, "cross": cache["cross"]})
+
+
+def decode_step(cfg: ArchConfig, params, tokens, cache, pos):
+    x = cm.embed_tokens(cfg, params["embedding"], tokens)
+    x = x + jax.lax.dynamic_slice_in_dim(params["pos_dec"], pos, 1)[None]
+    x, ys = _decode_stack(cfg, params, x, None, caches=cache, cache_pos=pos)
+    new_self, _ = ys
+    x = cm.layernorm(x, params["ln_final"], params["ln_final_b"])
+    return (cm.logits_out(cfg, params, x[:, -1]),
+            {"self": new_self, "cross": cache["cross"]})
+
+
+register_family("encdec")(sys.modules[__name__])

@@ -1,0 +1,93 @@
+"""AdamW with fp32 master weights, global-norm clip, cosine schedule.
+
+Hand-rolled (no optax in this environment) but production-shaped: the
+optimizer state keeps fp32 master parameters alongside the moments so
+models can train in bf16 compute precision; ``update`` is pure and
+jit/shard-friendly (state shards follow parameter shards).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init(cfg: AdamWConfig, params):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    # copy=True: fp32 params must not alias the master (donation safety).
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros32, params),
+        "nu": jax.tree.map(zeros32, params),
+        "master": jax.tree.map(
+            lambda p: jnp.array(p, dtype=jnp.float32, copy=True), params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: AdamWConfig, grads, state, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def leaf(g, mu, nu, master, p):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        upd = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        if master.ndim >= 2:                      # decay matrices only
+            upd = upd + cfg.weight_decay * master
+        master = master - lr * upd
+        return mu, nu, master, master.astype(p.dtype)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_ma = treedef.flatten_up_to(state["master"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [leaf(*args) for args in zip(flat_g, flat_mu, flat_nu, flat_ma,
+                                       flat_p)]
+    new_state = {
+        "step": step,
+        "mu": jax.tree.unflatten(treedef, [o[0] for o in out]),
+        "nu": jax.tree.unflatten(treedef, [o[1] for o in out]),
+        "master": jax.tree.unflatten(treedef, [o[2] for o in out]),
+    }
+    new_params = jax.tree.unflatten(treedef, [o[3] for o in out])
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,86 @@
+"""W8A8 inference path — the paper's int8 pipeline as a composable layer.
+
+The paper evaluates all three models in 8-bit with SmoothQuant-O1
+(§5.1).  This module is that pipeline on top of ``cute_matmul``:
+
+    weights:      offline per-output-channel absmax int8 (+ fp32 scale),
+                  optionally SmoothQuant-migrated by per-in-channel s;
+    activations:  dynamic per-row absmax int8 (the vector-unit prologue
+                  of Fig. 5 — ``kernels/quant`` on the Pallas path);
+    matmul:       int8×int8→int32 on the matrix unit;
+    epilogue:     dequant scales + bias + activation fused (Table 1's
+                  BiasType + the ``scale_a``/``scale_b`` operands).
+
+``W8A8Linear.from_float`` is the offline step; ``__call__`` is the whole
+fused online step — one ``cute_matmul``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fusion import Epilogue, EpilogueOperands, cute_matmul
+from repro.core.task import BiasType
+from repro.kernels.quant.ref import (quantize_colwise_ref,
+                                     quantize_rowwise_ref,
+                                     smoothquant_migrate)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class W8A8Linear:
+    """Quantized linear layer: y = act(deq(q(x/s) @ Wq) + b)."""
+
+    w_q: jax.Array                    # (K, N) int8
+    w_scale: jax.Array                # (N,) fp32
+    smooth: Optional[jax.Array]       # (K,) fp32 per-in-channel divisor
+    bias: Optional[jax.Array]         # (N,) fp32
+
+    @classmethod
+    def from_float(cls, w, bias=None, act_absmax=None, alpha: float = 0.5):
+        """Offline quantization; pass calibration ``act_absmax`` (K,) to
+        enable SmoothQuant migration (O1)."""
+        smooth = None
+        w = w.astype(jnp.float32)
+        if act_absmax is not None:
+            smooth = smoothquant_migrate(act_absmax, jnp.abs(w).max(1),
+                                         alpha)
+            w = w * smooth[:, None]
+        q, scale = quantize_colwise_ref(w)
+        return cls(w_q=q, w_scale=scale, smooth=smooth, bias=bias)
+
+    def __call__(self, x, *, activation: str = "none",
+                 out_dtype=jnp.bfloat16, backend: str = "xla"):
+        lead = x.shape[:-1]
+        x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+        if self.smooth is not None:
+            x2 = x2 / self.smooth
+        x_q, x_scale = quantize_rowwise_ref(x2)
+        ep = Epilogue(
+            bias_type=BiasType.ROW if self.bias is not None else
+            BiasType.ZERO,
+            activation=activation, has_scale_a=True, has_scale_b=True,
+            out_dtype=out_dtype)
+        y = cute_matmul(x_q, self.w_q, epilogue=ep,
+                        operands=EpilogueOperands(
+                            bias=self.bias, scale_a=x_scale,
+                            scale_b=self.w_scale),
+                        backend=backend)
+        return y.reshape(*lead, y.shape[-1])
+
+
+def quantize_mlp(wi, wo, x_calib):
+    """Quantize a SwiGLU MLP pair with activation calibration."""
+    lin_in = W8A8Linear.from_float(
+        wi, act_absmax=jnp.abs(x_calib.reshape(-1, x_calib.shape[-1])
+                               ).max(0))
+    # Hidden-activation calibration from the calibration batch itself.
+    h = jax.nn.silu(x_calib @ wi[:, : wi.shape[1] // 2]) * (
+        x_calib @ wi[:, wi.shape[1] // 2:])
+    lin_out = W8A8Linear.from_float(
+        wo, act_absmax=jnp.abs(h.reshape(-1, h.shape[-1])).max(0))
+    return lin_in, lin_out

@@ -1,0 +1,84 @@
+"""Cross-entropy with sequence-chunked logits (fused-CE memory saver).
+
+Materialising (B, S, V) logits for a 256k vocabulary at 4k context is the
+single biggest activation in training (§Perf memory-term analysis).  The
+chunked form scans the sequence, computing logits → log-softmax → NLL one
+chunk at a time, so the live buffer is (B, chunk, V).  Soft-capping
+(gemma2) happens inside the chunk.  Labels < 0 are masked (padding /
+vision-prefix positions).  Optional z-loss regularises the partition
+function (PaLM-style).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig
+
+
+def _chunk_ce(x, w, labels, softcap: float, z_loss: float,
+              onehot_pick: bool = False):
+    """x: (B, C, d); w: (d, V); labels: (B, C) -> (sum_nll, sum_z, n_valid).
+
+    ``onehot_pick`` selects the label logit with a one-hot contraction
+    instead of ``take_along_axis`` — under a vocab-sharded (TP) layout
+    the gather forces GSPMD to materialise unsharded logits, while the
+    contraction reduces over the sharded vocab axis with one small psum
+    (§Perf memory/collective lever).
+    """
+    logits = jnp.einsum("bcd,dv->bcv", x, w,
+                        preferred_element_type=jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    lse = jax.nn.logsumexp(logits, axis=-1)                  # (B, C)
+    valid = labels >= 0
+    safe = jnp.maximum(labels, 0)
+    if onehot_pick:
+        onehot = jax.nn.one_hot(safe, logits.shape[-1],
+                                dtype=logits.dtype)
+        picked = jnp.einsum("bcv,bcv->bc", logits, onehot)
+    else:
+        picked = jnp.take_along_axis(logits, safe[..., None],
+                                     axis=-1)[..., 0]
+    nll = jnp.where(valid, lse - picked, 0.0)
+    z = jnp.where(valid, jnp.square(lse), 0.0)
+    return (jnp.sum(nll), z_loss * jnp.sum(z),
+            jnp.sum(valid.astype(jnp.float32)))
+
+
+def chunked_softmax_xent(cfg: ArchConfig, params, hidden, labels, *,
+                         chunk: int = 512, z_loss: float = 1e-4,
+                         onehot_pick: bool = False):
+    """hidden: (B, S, d); labels: (B, S) with -1 = masked."""
+    w = (params["embedding"].T if cfg.tie_embeddings else params["lm_head"])
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n = (s + pad) // chunk
+    xs = (jnp.moveaxis(hidden.reshape(b, n, chunk, d), 1, 0),
+          jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0))
+
+    @jax.checkpoint
+    def body(carry, inp):
+        # Remat per chunk: backward recomputes chunk logits rather than
+        # storing (B, chunk, V) residuals for every chunk.
+        x_c, l_c = inp
+        nll, z, cnt = _chunk_ce(x_c, w, l_c, cfg.final_softcap, z_loss,
+                                onehot_pick)
+        return (carry[0] + nll, carry[1] + z, carry[2] + cnt), None
+
+    (nll, z, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0), jnp.float32(0)), xs)
+    cnt = jnp.maximum(cnt, 1.0)
+    return (nll + z) / cnt, {"nll": nll / cnt, "z": z / cnt, "tokens": cnt}
+
+
+def shift_labels(cfg: ArchConfig, tokens, labels):
+    """Mask out positions the model cannot predict (vision prefix)."""
+    if cfg.vision_prefix:
+        labels = labels.at[:, : cfg.vision_prefix].set(-1)
+    return labels

@@ -1,0 +1,95 @@
+"""Training step factory: microbatched, remat'd, compression-optional.
+
+``make_train_step(cfg, tcfg)`` builds a pure (params, opt_state, batch,
+residual) → (params, opt_state, metrics, residual) function suitable for
+``jax.jit`` with donated buffers.  Gradient accumulation scans over
+microbatches (sliced along the batch axis) so the activation working set
+is 1/N of the global batch — the memory-term lever of §Perf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ArchConfig, family_module
+from repro.optim import adamw, compression
+from repro.training import loss as loss_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatches: int = 1
+    z_loss: float = 1e-4
+    loss_chunk: int = 512
+    grad_compression: bool = False
+    ce_onehot_pick: bool = False     # vocab-sharded CE without the gather
+
+
+def _loss_fn(cfg: ArchConfig, tcfg: TrainConfig, params, batch):
+    mod = family_module(cfg)
+    labels = loss_lib.shift_labels(cfg, batch["tokens"], batch["labels"])
+    hidden = mod.forward(cfg, params, batch, return_hidden=True)
+    loss, metrics = loss_lib.chunked_softmax_xent(
+        cfg, params, hidden, labels, chunk=tcfg.loss_chunk,
+        z_loss=tcfg.z_loss, onehot_pick=tcfg.ce_onehot_pick)
+    return loss, metrics
+
+
+def _split_microbatch(batch, n: int, i):
+    def slice_one(x):
+        mb = x.shape[0] // n
+        return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+    return jax.tree.map(slice_one, batch)
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig = TrainConfig()):
+    grad_fn = jax.value_and_grad(
+        functools.partial(_loss_fn, cfg, tcfg), has_aux=True)
+
+    def train_step(params, opt_state, batch, residual=None):
+        n = tcfg.microbatches
+        if n == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def body(carry, i):
+                acc, loss_acc = carry
+                mb = _split_microbatch(batch, n, i)
+                (l, _), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.float32(0)), jnp.arange(n))
+            grads = jax.tree.map(lambda g: g / n, grads)
+            loss = loss_sum / n
+            metrics = {}
+
+        if tcfg.grad_compression and residual is not None:
+            grads, residual = compression.compressed_gradients(grads,
+                                                               residual)
+        params, opt_state, opt_metrics = adamw.update(
+            tcfg.optimizer, grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics, residual
+
+    return train_step
+
+
+def abstract_state(cfg: ArchConfig, tcfg: TrainConfig, key=None):
+    """(abstract params, abstract opt_state) via eval_shape — no alloc."""
+    mod = family_module(cfg)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda k: mod.init(cfg, k), key)
+    opt_state = jax.eval_shape(
+        lambda p: adamw.init(tcfg.optimizer, p), params)
+    return params, opt_state

@@ -1,0 +1,37 @@
+"""Area/power model: Table 7 calibration + scaling behaviour."""
+
+import pytest
+
+from repro.core.area import estimate
+from repro.core.config import CASE_STUDY, scaled_config
+from repro.core.hardware import GIGA
+
+
+def test_table7_calibration_exact():
+    ap = estimate(CASE_STUDY)
+    assert ap.ram_mm2 == pytest.approx(0.164, rel=1e-6)
+    assert ap.logic_mm2 == pytest.approx(0.367, rel=1e-6)
+    assert ap.total_mm2 == pytest.approx(0.531, rel=1e-3)
+    assert ap.total_w == pytest.approx(1.506, rel=1e-3)
+
+
+def test_area_scales_with_pe_array():
+    small = estimate(CASE_STUDY.with_(m_pe=2, n_pe=2))
+    big = estimate(CASE_STUDY.with_(m_pe=8, n_pe=8))
+    assert big.logic_mm2 == pytest.approx(4 * estimate(CASE_STUDY).logic_mm2,
+                                          rel=1e-6)
+    assert small.logic_mm2 < estimate(CASE_STUDY).logic_mm2
+
+
+def test_scratchpad_cost_of_saturating_eq2():
+    """The beyond-paper 128x128 scratchpad buys util with ~2.4x the SRAM."""
+    sat = estimate(CASE_STUDY.with_(m_scp=128, n_scp=128))
+    base = estimate(CASE_STUDY)
+    assert 1.5 < sat.ram_mm2 / base.ram_mm2 < 4.0
+    assert sat.total_mm2 < 2 * base.total_mm2   # still a small unit
+
+
+def test_power_scales_with_frequency():
+    hi = estimate(CASE_STUDY.with_(freq_hz=4 * GIGA))
+    assert hi.total_w == pytest.approx(2 * estimate(CASE_STUDY).total_w,
+                                       rel=1e-6)

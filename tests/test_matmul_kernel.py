@@ -1,0 +1,139 @@
+"""Fused matmul Pallas kernel vs the pure-jnp oracle: shape/dtype sweeps
++ hypothesis property tests (interpret mode)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import precision as prec
+from repro.core.fusion import Epilogue, EpilogueOperands
+from repro.core.task import BiasType
+from repro.kernels.matmul.ops import fused_matmul, supports
+from repro.kernels.matmul.ref import fused_matmul_ref
+
+
+def _run(a, b, ep=Epilogue(), ops=EpilogueOperands(), policy=None,
+         bs=(64, 128, 128), rtol=2e-2):
+    out = fused_matmul(a, b, epilogue=ep, operands=ops, policy=policy,
+                       block_shape=bs)
+    ep2 = ep if ep.out_dtype is not None else dataclasses.replace(
+        ep, out_dtype=out.dtype)
+    acc = policy.accum_dtype if policy else (
+        jnp.int32 if a.dtype == jnp.int8 else jnp.float32)
+    ref = fused_matmul_ref(a, b, epilogue=ep2, operands=ops, accum_dtype=acc)
+    o = np.asarray(out, np.float32)
+    r = np.asarray(ref, np.float32)
+    err = np.abs(o - r).max() / (np.abs(r).max() + 1e-9)
+    assert err < rtol, err
+    return out
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+DTYPES = [jnp.float32, jnp.bfloat16, jnp.float16, jnp.int8,
+          jnp.float8_e4m3fn]
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=lambda d: d.__name__)
+def test_dtype_sweep(rng, dtype):
+    if dtype == jnp.int8:
+        a = jax.random.randint(rng, (96, 128), -127, 127, jnp.int8)
+        b = jax.random.randint(rng, (128, 128), -127, 127, jnp.int8)
+        _run(a, b, Epilogue(out_dtype=jnp.int32), rtol=1e-6)
+    else:
+        a = jax.random.normal(rng, (96, 128)).astype(dtype)
+        b = jax.random.normal(jax.random.PRNGKey(1), (128, 128)).astype(dtype)
+        _run(a, b, rtol=3e-2 if dtype != jnp.float32 else 1e-5)
+
+
+@pytest.mark.parametrize("shape", [(64, 128, 128), (200, 384, 256),
+                                   (33, 130, 257), (512, 128, 640)])
+def test_shape_sweep(rng, shape):
+    m, k, n = shape
+    a = jax.random.normal(rng, (m, k), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    _run(a, b, rtol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["relu", "gelu", "silu", "gelu_tanh",
+                                 "relu2", "sigmoid"])
+def test_activation_epilogues(rng, act):
+    a = jax.random.normal(rng, (64, 128), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 128), jnp.bfloat16)
+    _run(a, b, Epilogue(activation=act))
+
+
+def test_bias_row_and_full(rng):
+    a = jax.random.normal(rng, (64, 128), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 256), jnp.bfloat16)
+    bias_r = jax.random.normal(jax.random.PRNGKey(2), (256,), jnp.float32)
+    _run(a, b, Epilogue(bias_type=BiasType.ROW), EpilogueOperands(bias=bias_r))
+    bias_f = jax.random.normal(jax.random.PRNGKey(3), (64, 256), jnp.float32)
+    _run(a, b, Epilogue(bias_type=BiasType.FULL),
+         EpilogueOperands(bias=bias_f))
+
+
+def test_glu_epilogues(rng):
+    a = jax.random.normal(rng, (64, 128), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 512), jnp.bfloat16)
+    _run(a, b, Epilogue(activation="silu", glu=True))
+    bias = jax.random.normal(jax.random.PRNGKey(2), (512,), jnp.float32)
+    _run(a, b, Epilogue(activation="gelu_tanh", glu=True,
+                        bias_type=BiasType.ROW), EpilogueOperands(bias=bias))
+
+
+def test_int8_dequant_pipeline(rng):
+    """SmoothQuant-style: int8 x int8 -> int32 -> scales -> bf16 + silu."""
+    a = jax.random.randint(rng, (64, 256), -127, 127, jnp.int8)
+    b = jax.random.randint(jax.random.PRNGKey(1), (256, 128), -127, 127,
+                           jnp.int8)
+    sa = jax.random.uniform(jax.random.PRNGKey(2), (64,), jnp.float32,
+                            0.005, 0.02)
+    sb = jax.random.uniform(jax.random.PRNGKey(3), (128,), jnp.float32,
+                            0.005, 0.02)
+    _run(a, b, Epilogue(has_scale_a=True, has_scale_b=True,
+                        activation="silu", out_dtype=jnp.bfloat16),
+         EpilogueOperands(scale_a=sa, scale_b=sb))
+
+
+def test_residual_and_softcap(rng):
+    a = jax.random.normal(rng, (64, 128), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 128), jnp.bfloat16)
+    res = jax.random.normal(jax.random.PRNGKey(2), (64, 128), jnp.float32)
+    _run(a, b, Epilogue(has_residual=True), EpilogueOperands(residual=res))
+    _run(a, b, Epilogue(softcap=30.0))
+
+
+def test_batched_inputs(rng):
+    a = jax.random.normal(rng, (3, 32, 128), jnp.bfloat16)
+    b = jax.random.normal(jax.random.PRNGKey(1), (128, 128), jnp.bfloat16)
+    out = _run(a, b)
+    assert out.shape == (3, 32, 128)
+
+
+def test_supports_contract():
+    assert supports((64, 128), (128, 256), Epilogue())
+    assert not supports((64, 100), (100, 256), Epilogue())
+    assert supports((64, 128), (128, 2, 128), Epilogue(glu=True))
+
+
+@given(m=st.integers(1, 150), k=st.integers(1, 3), n=st.integers(1, 3),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=12, deadline=None)
+def test_property_arbitrary_shapes(m, k, n, seed):
+    """Tiling+padding is exact for any shape (fp32, zero-padded K)."""
+    key = jax.random.PRNGKey(seed)
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (m, 64 * k), jnp.float32)
+    b = jax.random.normal(kb, (64 * k, 64 * n), jnp.float32)
+    out = fused_matmul(a, b, block_shape=(64, 64, 64))
+    ref = a @ b
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4,
+                               atol=1e-4)

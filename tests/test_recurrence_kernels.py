@@ -1,0 +1,102 @@
+"""RWKV-6 / RG-LRU kernels: Pallas vs chunked-jnp vs naive-scan oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_decode_step, rglru_ref
+from repro.kernels.rwkv6.ops import rwkv6_scan
+from repro.kernels.rwkv6.ref import rwkv6_ref
+from repro.models.rwkv6 import rwkv6_chunked_jnp
+
+
+def _rwkv_inputs(B=2, H=3, T=96, C=64, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    r = jax.random.normal(ks[0], (B, H, T, C))
+    k = jax.random.normal(ks[1], (B, H, T, C))
+    v = jax.random.normal(ks[2], (B, H, T, C))
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, H, T, C)) * 0.5)
+    u = jax.random.normal(ks[4], (H, C)) * 0.5
+    return r, k, v, lw, u
+
+
+class TestRwkv6:
+    @pytest.mark.parametrize("t", [32, 70, 96])
+    def test_pallas_vs_oracle(self, t):
+        r, k, v, lw, u = _rwkv_inputs(T=t)
+        out = rwkv6_scan(r, k, v, lw, u, chunk=32)
+        ref, _ = rwkv6_ref(r, k, v, lw, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_chunked_jnp_vs_oracle(self):
+        r, k, v, lw, u = _rwkv_inputs(T=80)
+        out, state = rwkv6_chunked_jnp(r, k, v, lw, u, chunk=32)
+        ref, state_ref = rwkv6_ref(r, k, v, lw, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(state), np.asarray(state_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_initial_state_continuation(self):
+        """chunked(T) == chunked(T/2) ∘ chunked(T/2) with carried state."""
+        r, k, v, lw, u = _rwkv_inputs(T=64)
+        full, state_full = rwkv6_chunked_jnp(r, k, v, lw, u, chunk=32)
+        h1, s1 = rwkv6_chunked_jnp(r[:, :, :32], k[:, :, :32], v[:, :, :32],
+                                   lw[:, :, :32], u, chunk=32)
+        h2, s2 = rwkv6_chunked_jnp(r[:, :, 32:], k[:, :, 32:], v[:, :, 32:],
+                                   lw[:, :, 32:], u, chunk=32,
+                                   initial_state=s1)
+        np.testing.assert_allclose(np.asarray(h2),
+                                   np.asarray(full[:, :, 32:]),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(state_full),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_strong_decay_forgets_beyond_one_token(self):
+        """Property: with decay ≈ 0, S_{t-1} ≈ k_{t-1}ᵀ v_{t-1}, so each
+        output sees exactly the previous token + its own bonus term."""
+        r, k, v, lw, u = _rwkv_inputs(T=32)
+        lw_hard = jnp.full_like(lw, -30.0)          # w = e^-30 ≈ 0
+        out, _ = rwkv6_ref(r, k, v, lw_hard, u)
+        bonus = jnp.sum(r * u[None, :, None, :] * k, axis=-1,
+                        keepdims=True) * v
+        prev = (jnp.sum(r[:, :, 1:] * k[:, :, :-1], axis=-1, keepdims=True)
+                * v[:, :, :-1])
+        expect = bonus.at[:, :, 1:].add(prev)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=1e-3, atol=1e-3)
+
+
+class TestRgLru:
+    @pytest.mark.parametrize("t,c", [(64, 128), (100, 192), (32, 64)])
+    def test_pallas_vs_oracle(self, t, c):
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        log_a = -jax.nn.softplus(jax.random.normal(ks[0], (2, t, c)))
+        x = jax.random.normal(ks[1], (2, t, c))
+        out = rglru_scan(log_a, x, chunk=32, block_c=64)
+        ref, _ = rglru_ref(log_a, x)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_decode_step_matches_scan(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 2)
+        log_a = -jax.nn.softplus(jax.random.normal(ks[0], (2, 8, 16)))
+        x = jax.random.normal(ks[1], (2, 8, 16))
+        seq, final = rglru_ref(log_a, x)
+        h = jnp.zeros((2, 16))
+        for t in range(8):
+            out, h = rglru_decode_step(h, log_a[:, t], x[:, t])
+            np.testing.assert_allclose(np.asarray(out),
+                                       np.asarray(seq[:, t]),
+                                       rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(final),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_a_one_is_pure_integrator_limit(self):
+        """log_a = 0 => a=1, beta=0: state never changes from 0."""
+        x = jnp.ones((1, 16, 8))
+        out = rglru_scan(jnp.zeros((1, 16, 8)), x, chunk=8, block_c=8)
+        np.testing.assert_allclose(np.asarray(out), 0.0, atol=1e-6)

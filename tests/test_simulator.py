@@ -1,0 +1,92 @@
+"""Cycle-approximate simulator vs the paper's headline claims."""
+
+import pytest
+
+from repro.core.config import CASE_STUDY, PLATFORM_2TOPS
+from repro.core.hardware import BOOM, KUNMINGHU, PLATFORMS, ROCKET, SHUTTLE, \
+    XEON_8580
+from repro.core.simulator import (LayerTrace, SATURN_512, baseline_workload_seconds,
+                                  simulate_gemm, simulate_layer,
+                                  simulate_workload)
+from repro.core.task import BiasType, MatMulTask
+
+
+class TestGemmUtilization:
+    def test_fig6_above_90pct_all_platforms(self):
+        """Paper Fig. 6: 2 TOPS unit, M=N=512, K in 256..8192, util > 90%."""
+        for platform in PLATFORMS.values():
+            for k in (256, 512, 1024, 2048, 4096, 8192):
+                t = MatMulTask(m=512, n=512, k=k)
+                r = simulate_gemm(PLATFORM_2TOPS, t, platform)
+                assert r.utilization > 0.90, (platform.name, k, r.utilization)
+
+    def test_case_study_band(self):
+        """4 TOPS @ 48 GB/s is bandwidth-limited: util in the ~70-85% band
+        the paper's Fig. 7 shows for Eq.2-matched configurations."""
+        t = MatMulTask(m=512, n=512, k=4096)
+        r = simulate_gemm(CASE_STUDY, t, SHUTTLE)
+        assert 0.60 < r.utilization < 0.85
+
+    def test_bound_classification(self):
+        small_k = simulate_gemm(CASE_STUDY, MatMulTask(m=512, n=512, k=256),
+                                SHUTTLE)
+        assert small_k.breakdown["bound"] == "memory"
+        r2 = simulate_gemm(PLATFORM_2TOPS, MatMulTask(m=512, n=512, k=4096),
+                           SHUTTLE)
+        assert r2.breakdown["bound"] == "compute"
+
+    def test_csr_dispatch_costs_more_than_rocc(self):
+        t = MatMulTask(m=64, n=64, k=64)     # dispatch-dominated tiny task
+        rocc = simulate_gemm(PLATFORM_2TOPS, t, BOOM)
+        csr = simulate_gemm(PLATFORM_2TOPS, t, KUNMINGHU)
+        assert csr.cycles >= rocc.cycles
+
+    def test_bias_adds_traffic(self):
+        t0 = MatMulTask(m=512, n=512, k=256)
+        t1 = MatMulTask(m=512, n=512, k=256, bias_type=BiasType.FULL)
+        r0 = simulate_gemm(CASE_STUDY, t0, SHUTTLE)
+        r1 = simulate_gemm(CASE_STUDY, t1, SHUTTLE)
+        assert r1.cycles > r0.cycles
+
+
+def _layer(k=2048, vec_elems=512 * 512):
+    return LayerTrace(
+        name="linear+silu",
+        gemms=(MatMulTask(m=512, n=512, k=k),),
+        vector_ops={"silu": vec_elems, "quant": vec_elems},
+        intermediate_bytes=vec_elems * 4.0,
+    )
+
+
+class TestFusion:
+    def test_fused_faster_than_unfused(self):
+        layer = _layer()
+        f = simulate_layer(CASE_STUDY, layer, fused=True)
+        u = simulate_layer(CASE_STUDY, layer, fused=False)
+        assert f["cycles"] < u["cycles"]
+
+    def test_fused_hides_shorter_stream(self):
+        layer = _layer()
+        f = simulate_layer(CASE_STUDY, layer, fused=True)
+        assert f["cycles"] < f["matrix"] + f["vector"]
+        assert f["cycles"] >= max(f["matrix"], f["vector"])
+
+    def test_workload_aggregation(self):
+        layers = [_layer(), _layer(k=4096)]
+        w = simulate_workload(CASE_STUDY, layers, fused=True)
+        assert w["seconds"] > 0
+        assert w["flops"] == sum(l.flops() for l in layers)
+
+    def test_baseline_no_overlap(self):
+        layers = [_layer()]
+        ours = simulate_workload(CASE_STUDY, layers, fused=True)["seconds"]
+        base = baseline_workload_seconds(XEON_8580, layers)
+        # With AMX-class compute and the same vector work, the fused
+        # schedule should not lose (Table 6 shows >= 1x on every model).
+        assert base >= 0.8 * ours
+
+    def test_division_cost_visible(self):
+        """§5.4: Saturn's element-wise divide makes SiLU expensive."""
+        silu = SATURN_512.cycles("silu", 1 << 20)
+        relu = SATURN_512.cycles("relu", 1 << 20)
+        assert silu > 5 * relu

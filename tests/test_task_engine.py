@@ -1,0 +1,87 @@
+"""MatMulTask (Table 1) + the asyncMatMul/checkMatmul programming model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AsyncMatmulEngine, DataType, MatMulTask, Status,
+                        pipelined_fused_matmul, tile_tasks)
+
+
+class TestTask:
+    def test_degenerate_rejected(self):
+        with pytest.raises(ValueError):
+            MatMulTask(m=0, n=4, k=4)
+
+    def test_default_strides_dense(self):
+        t = MatMulTask(m=8, n=16, k=32)
+        assert (t.stride_a, t.stride_b, t.stride_c) == (32, 16, 16)
+
+    def test_flops_bytes(self):
+        t = MatMulTask(m=8, n=16, k=32, data_type=DataType.INT8)
+        assert t.flops == 2 * 8 * 16 * 32
+        assert t.in_bytes == 8 * 32 + 32 * 16
+
+    def test_tiling_covers_matrix(self):
+        t = MatMulTask(m=100, n=70, k=64)
+        tiles = tile_tasks(t, 32, 32)
+        assert len(tiles) == 4 * 3
+        assert sum(s.m * s.n for s in tiles) == 100 * 70
+        # edge tiles keep true extents
+        assert {s.m for s in tiles} == {32, 4}
+        assert {s.n for s in tiles} == {32, 6}
+
+
+class TestEngine:
+    def test_dispatch_is_lazy_wait_forces(self):
+        eng = AsyncMatmulEngine()
+        a = jnp.ones((8, 16), jnp.float32)
+        b = jnp.ones((16, 4), jnp.float32)
+        task = MatMulTask(m=8, n=4, k=16, data_type=DataType.FP32)
+        h = eng.dispatch(task, a, b)
+        assert task.status == Status.RUNNING
+        assert not eng.check(h)
+        out = eng.wait(h)
+        assert eng.check(h)
+        assert task.status == Status.DONE
+        np.testing.assert_allclose(np.asarray(out), 16.0)
+
+    def test_shape_mismatch_rejected(self):
+        eng = AsyncMatmulEngine()
+        with pytest.raises(ValueError):
+            eng.dispatch(MatMulTask(m=9, n=4, k=16),
+                         jnp.ones((8, 16)), jnp.ones((16, 4)))
+
+    def test_drain(self):
+        eng = AsyncMatmulEngine()
+        a = jnp.ones((4, 8), jnp.float32)
+        b = jnp.ones((8, 4), jnp.float32)
+        for _ in range(3):
+            eng.dispatch(MatMulTask(m=4, n=4, k=8, data_type=DataType.FP32),
+                         a, b)
+        outs = eng.drain()
+        assert len(outs) == 3
+
+
+class TestListing1Pipeline:
+    def test_matches_reference(self):
+        k0, k1 = jax.random.split(jax.random.PRNGKey(0))
+        a = jax.random.normal(k0, (128, 64))
+        b = jax.random.normal(k1, (64, 96))
+        out = pipelined_fused_matmul(a, b, jax.nn.relu, tile_m=32)
+        ref = jax.nn.relu(a @ b)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_under_jit(self):
+        a = jnp.ones((64, 32))
+        b = jnp.ones((32, 16))
+        f = jax.jit(lambda a, b: pipelined_fused_matmul(
+            a, b, lambda x: x * 2.0, tile_m=16))
+        np.testing.assert_allclose(np.asarray(f(a, b)), 64.0)
+
+    def test_tile_must_divide(self):
+        with pytest.raises(ValueError):
+            pipelined_fused_matmul(jnp.ones((10, 4)), jnp.ones((4, 4)),
+                                   jax.nn.relu, tile_m=3)

@@ -1,0 +1,170 @@
+"""Training substrate: loss, AdamW, microbatch equivalence, compression,
+actual loss descent on the synthetic stream."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.base import family_module
+from repro.optim import adamw, compression
+from repro.training import loss as loss_lib
+from repro.training.train_step import TrainConfig, make_train_step
+
+
+def _tiny():
+    cfg = get_config("yi-6b", reduced=True).with_(
+        remat="none", dtype=jnp.float32, n_layers=2, d_ff=64, d_model=32,
+        n_heads=2, n_kv_heads=2, head_dim=16, vocab_size=64, attn_chunk=16)
+    mod = family_module(cfg)
+    params = mod.init(cfg, jax.random.PRNGKey(0))
+    return cfg, mod, params
+
+
+class TestLoss:
+    def test_chunked_equals_dense(self):
+        cfg, mod, params = _tiny()
+        h = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model))
+        labels = jax.random.randint(jax.random.PRNGKey(2), (2, 24), 0, 64)
+        l_chunk, _ = loss_lib.chunked_softmax_xent(cfg, params, h, labels,
+                                                   chunk=8, z_loss=0.0)
+        logits = jnp.einsum("bsd,dv->bsv", h, params["lm_head"])
+        lse = jax.nn.logsumexp(logits, -1)
+        nll = lse - jnp.take_along_axis(logits, labels[..., None],
+                                        -1)[..., 0]
+        np.testing.assert_allclose(float(l_chunk), float(nll.mean()),
+                                   rtol=1e-5)
+
+    def test_masked_labels_excluded(self):
+        cfg, mod, params = _tiny()
+        h = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        labels = jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 64)
+        masked = labels.at[:, :8].set(-1)
+        l_m, aux = loss_lib.chunked_softmax_xent(cfg, params, h, masked,
+                                                 chunk=8, z_loss=0.0)
+        assert float(aux["tokens"]) == 16.0
+        l_half, _ = loss_lib.chunked_softmax_xent(
+            cfg, params, h[:, 8:], labels[:, 8:], chunk=8, z_loss=0.0)
+        np.testing.assert_allclose(float(l_m), float(l_half), rtol=1e-5)
+
+    def test_grad_matches_dense(self):
+        cfg, mod, params = _tiny()
+        h = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model))
+        labels = jax.random.randint(jax.random.PRNGKey(2), (1, 16), 0, 64)
+
+        def f_chunk(w):
+            p = dict(params, lm_head=w)
+            return loss_lib.chunked_softmax_xent(cfg, p, h, labels, chunk=4,
+                                                 z_loss=0.0)[0]
+
+        def f_dense(w):
+            logits = jnp.einsum("bsd,dv->bsv", h, w)
+            lse = jax.nn.logsumexp(logits, -1)
+            nll = lse - jnp.take_along_axis(logits, labels[..., None],
+                                            -1)[..., 0]
+            return nll.mean()
+
+        g1 = jax.grad(f_chunk)(params["lm_head"])
+        g2 = jax.grad(f_dense)(params["lm_head"])
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-6)
+
+
+class TestAdamW:
+    def test_descends_quadratic(self):
+        cfg = adamw.AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                                total_steps=100)
+        params = {"w": jnp.array([5.0, -3.0])}
+        state = adamw.init(cfg, params)
+        for _ in range(60):
+            g = {"w": 2 * params["w"]}
+            params, state, _ = adamw.update(cfg, g, state, params)
+        assert float(jnp.abs(params["w"]).max()) < 0.5
+
+    def test_schedule_shape(self):
+        cfg = adamw.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+        lrs = [float(adamw.schedule(cfg, jnp.int32(s)))
+               for s in (0, 5, 10, 50, 100)]
+        assert lrs[0] < lrs[1] < lrs[2]
+        assert lrs[2] == pytest.approx(1e-3, rel=1e-3)
+        assert lrs[4] < lrs[3] < lrs[2]
+
+    def test_clipping(self):
+        cfg = adamw.AdamWConfig(clip_norm=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros(4)}
+        state = adamw.init(cfg, params)
+        _, _, m = adamw.update(cfg, {"w": jnp.full(4, 100.0)}, state, params)
+        assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+    def test_bf16_params_fp32_master(self):
+        cfg = adamw.AdamWConfig(lr=1e-2, warmup_steps=0, weight_decay=0.0)
+        params = {"w": jnp.ones(4, jnp.bfloat16)}
+        state = adamw.init(cfg, params)
+        assert state["master"]["w"].dtype == jnp.float32
+        p2, s2, _ = adamw.update(cfg, {"w": jnp.full(4, 1e-4)}, state, params)
+        assert p2["w"].dtype == jnp.bfloat16
+        # master tracks sub-bf16 updates
+        assert float(jnp.abs(s2["master"]["w"] - 1.0).max()) > 0
+
+
+class TestMicrobatching:
+    def test_equivalent_to_single_batch(self):
+        cfg, mod, params = _tiny()
+        from repro.configs.registry import concrete_batch
+        batch = concrete_batch(cfg, 4, 16, "train")
+        t1 = TrainConfig(microbatches=1, loss_chunk=8,
+                         optimizer=adamw.AdamWConfig(warmup_steps=0))
+        t4 = TrainConfig(microbatches=4, loss_chunk=8,
+                         optimizer=adamw.AdamWConfig(warmup_steps=0))
+        s1, s4 = make_train_step(cfg, t1), make_train_step(cfg, t4)
+        opt = adamw.init(t1.optimizer, params)
+        p1, _, m1, _ = jax.jit(s1)(params, opt, batch)
+        p4, _, m4, _ = jax.jit(s4)(params, opt, batch)
+        np.testing.assert_allclose(float(m1["loss"]), float(m4["loss"]),
+                                   rtol=1e-5)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-5)
+
+
+class TestCompression:
+    def test_error_feedback_tracks_exact_sgd(self):
+        """Compressed-SGD with error feedback converges like exact SGD."""
+        w_exact = jnp.array([4.0, -2.0, 1.0])
+        w_comp = w_exact
+        res = compression.init_residual({"w": w_comp})["w"]
+        lr = 0.05
+        for _ in range(200):
+            g_e = 2 * w_exact
+            w_exact = w_exact - lr * g_e
+            g_c = {"w": 2 * w_comp}
+            deq, new_res = compression.compressed_gradients(
+                g_c, {"w": res})
+            res = new_res["w"]
+            w_comp = w_comp - lr * deq["w"]
+        assert float(jnp.abs(w_comp).max()) < 0.05
+        assert float(jnp.abs(w_exact - w_comp).max()) < 0.05
+
+    def test_volume_reduction(self):
+        g = {"w": jnp.ones((64, 64), jnp.float32)}
+        q, s, _ = compression.compress_tree(g, compression.init_residual(g))
+        assert q["w"].dtype == jnp.int8          # 4x smaller payload
+
+
+class TestEndToEnd:
+    def test_loss_decreases_on_synthetic_stream(self):
+        cfg, mod, params = _tiny()
+        tcfg = TrainConfig(loss_chunk=16, optimizer=adamw.AdamWConfig(
+            lr=3e-3, warmup_steps=5, total_steps=60))
+        step = jax.jit(make_train_step(cfg, tcfg))
+        opt = adamw.init(tcfg.optimizer, params)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                      global_batch=8, seq_len=32))
+        losses = []
+        for _ in range(40):
+            batch = next(data)
+            params, opt, m, _ = step(params, opt, batch)
+            losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses[:3]
