@@ -1,0 +1,31 @@
+"""Shims over jax API churn so one codebase spans 0.4.x and newer.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax`` and
+renamed its replication-check kwarg (``check_rep`` -> ``check_vma``);
+this wrapper accepts either spelling and translates to whatever the
+installed jax understands.  Mesh-construction shims live in
+``repro.launch.mesh`` (``compat_make_mesh`` / ``compat_abstract_mesh``).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # older jax exposes it under experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SHARD_MAP_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f=None, **kw):
+    for ours, theirs in (("check_vma", "check_rep"),
+                         ("check_rep", "check_vma")):
+        if ours in kw and ours not in _SHARD_MAP_PARAMS \
+                and theirs in _SHARD_MAP_PARAMS:
+            kw[theirs] = kw.pop(ours)
+    if f is None:
+        return functools.partial(shard_map, **kw)
+    return _shard_map(f, **kw)

@@ -36,8 +36,8 @@ def rglru_kernel(log_a_ref, x_ref, o_ref, h_ref, *, chunk: int):
 
     def body(t, h):
         h = a[t] * h + gated[t]
-        pl.store(o_ref, (0, pl.dslice(t, 1), slice(None)),
-                 h[None].astype(o_ref.dtype))
+        pl.store(o_ref, (pl.dslice(0, 1), pl.dslice(t, 1), slice(None)),
+                 h[None, None].astype(o_ref.dtype))
         return h
 
     h_final = jax.lax.fori_loop(0, chunk, body, h_ref[0, :])

@@ -21,7 +21,7 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.core.jaxcompat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.fusion import Epilogue, linear

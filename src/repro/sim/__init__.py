@@ -1,0 +1,33 @@
+"""Discrete-event task-graph runtime for the CUTEv2 reproduction.
+
+One ``TaskGraph`` IR (``sim.graph``) drives two consumers:
+
+* ``sim.desim`` — a discrete-event, resource-level simulator (CPU
+  dispatcher, memory loader, scratchpad banks, PE array, Saturn vector
+  unit) that derives per-resource timelines instead of asserting the
+  closed-form ``max(matrix, vec)`` of ``core.simulator``.
+* ``sim.lower`` — a lowering that executes the *same* graph through
+  ``AsyncMatmulEngine``/``cute_matmul`` on the JAX side, making the
+  paper's "unified software stack" literal.
+
+``sim.trace`` exports the simulated timelines as Chrome-trace JSON
+(viewable in Perfetto / chrome://tracing).
+"""
+
+from repro.sim.graph import (Granularity, Node, TaskGraph,
+                             build_gemm_graph)
+from repro.sim.desim import DESimResult, Machine, simulate_graph
+from repro.sim.lower import (desim_gemm, desim_layer, desim_workload,
+                             epilogue_vector_ops, execute_graph_jax,
+                             exposed_dispatch, layer_to_graph,
+                             workload_to_graph)
+from repro.sim.trace import chrome_trace, dump_chrome_trace
+
+__all__ = [
+    "Granularity", "Node", "TaskGraph", "build_gemm_graph",
+    "DESimResult", "Machine", "simulate_graph",
+    "desim_gemm", "desim_layer", "desim_workload", "epilogue_vector_ops",
+    "execute_graph_jax", "exposed_dispatch", "layer_to_graph",
+    "workload_to_graph",
+    "chrome_trace", "dump_chrome_trace",
+]

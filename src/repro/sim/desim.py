@@ -1,0 +1,219 @@
+"""Discrete-event execution of a TaskGraph on an explicit machine model.
+
+Where ``core.simulator`` asserts the overlap with a closed-form
+``max(matrix, vec)``, this module *derives* it: every node of the graph
+contends for five explicit resources and the timeline falls out of the
+event schedule.
+
+Machine resources (paper §4.1/§4.4):
+
+* ``dispatcher`` — the CPU front-end.  Every ``asyncMatMul`` occupies it
+  for ``platform.dispatch_cycles`` (RoCC few tens, CSR ~100, Table 3)
+  and every completion poll for ``platform.check_cycles``.  It is a
+  single serial resource: a slow interface genuinely backpressures the
+  tile stream instead of being a term in a max().
+* ``loader`` — streams A/B panels in and the C tile out at the SoC
+  bandwidth derated by ``platform.dram_efficiency`` (§5.4).
+* ``banks`` — the double-buffered scratchpad: ``unit.scratchpad_banks``
+  slots, each held for a tile's load+compute span.  Two banks is what
+  lets tile *i+1*'s load overlap tile *i*'s compute.
+* ``pe`` — the M_pe×N_pe array; a tile occupies it for the Eq.1 compute
+  time with PE-quantised extents, plus a six-stage pipeline drain on the
+  result latency.
+* ``vector`` — the Saturn RVV unit running epilogue nodes.
+
+A matmul node's life: dispatch → wait for a scratchpad bank → load →
+compute → (writeback ‖ status poll) → dependents released.  Vector and
+memory nodes occupy their single resource for their modelled duration.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.config import MatrixUnitConfig
+from repro.core.hardware import CpuPlatform, SHUTTLE
+from repro.core.precision import policy
+from repro.core.simulator import SATURN_512, VectorUnit
+from repro.core.task import BiasType
+from repro.sim.graph import Node, TaskGraph
+from repro.sim.resources import EventLoop, Resource
+
+
+@dataclasses.dataclass
+class Machine:
+    """The resource set one (unit, platform, vector) triple implies."""
+
+    loop: EventLoop
+    unit: MatrixUnitConfig
+    platform: CpuPlatform
+    vector_unit: VectorUnit
+    dispatcher: Resource
+    loader: Resource
+    banks: Resource
+    pe: Resource
+    vector: Resource
+
+    @property
+    def bytes_per_cycle(self) -> float:
+        return (self.unit.bandwidth * self.platform.dram_efficiency
+                / self.unit.freq_hz)
+
+    def resources(self) -> "list[Resource]":
+        return [self.dispatcher, self.loader, self.banks, self.pe,
+                self.vector]
+
+
+def build_machine(unit: MatrixUnitConfig, platform: CpuPlatform,
+                  vector_unit: VectorUnit = SATURN_512) -> Machine:
+    loop = EventLoop()
+    return Machine(
+        loop=loop, unit=unit, platform=platform, vector_unit=vector_unit,
+        dispatcher=Resource(loop, "dispatcher"),
+        loader=Resource(loop, "mem_loader"),
+        banks=Resource(loop, "scratchpad", capacity=unit.scratchpad_banks),
+        pe=Resource(loop, "pe_array"),
+        vector=Resource(loop, "vector_unit"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Per-node cost model (mirrors core.simulator.simulate_gemm's per-tile terms).
+# ---------------------------------------------------------------------------
+
+def tile_costs(machine: Machine, node: Node,
+               out_bytes: float = 4.0) -> "dict[str, float]":
+    task = node.task
+    unit = machine.unit
+    dt = task.data_type
+    eb = policy(dt).bytes_per_elem
+    m_eff = -(-task.m // unit.m_pe) * unit.m_pe
+    n_eff = -(-task.n // unit.n_pe) * unit.n_pe
+    kpe = unit.k_pe_elems(dt)
+    k_eff = -(-task.k // kpe) * kpe
+    compute = m_eff * n_eff * k_eff / unit.macs_per_cycle(dt)
+    bias_bytes = {BiasType.ZERO: 0.0, BiasType.ROW: task.n * 4.0,
+                  BiasType.FULL: task.m * task.n * 4.0}[task.bias_type]
+    load = ((task.m + task.n) * task.k * eb + bias_bytes) \
+        / machine.bytes_per_cycle
+    writeback = task.m * task.n * out_bytes / machine.bytes_per_cycle
+    return {"compute": compute, "load": load, "writeback": writeback}
+
+
+@dataclasses.dataclass
+class DESimResult:
+    cycles: float                       # makespan
+    ideal_matrix_cycles: float          # Eq.1 lower bound for all matmul work
+    node_span: "dict[int, tuple[float, float]]"   # nid -> (start, end)
+    intervals: "dict[str, list[tuple[float, float, str]]]"
+    capacity: "dict[str, int]"
+    freq_hz: float
+
+    @property
+    def matrix_utilization(self) -> float:
+        return (self.ideal_matrix_cycles / self.cycles) if self.cycles else 0.0
+
+    def busy(self, resource: str) -> float:
+        return sum(e - s for s, e, _ in self.intervals[resource])
+
+    def utilization(self, resource: str) -> float:
+        if not self.cycles:
+            return 0.0
+        return self.busy(resource) / (self.cycles * self.capacity[resource])
+
+    def utilizations(self) -> "dict[str, float]":
+        return {r: self.utilization(r) for r in self.intervals}
+
+    def seconds(self) -> float:
+        return self.cycles / self.freq_hz
+
+
+def simulate_graph(graph: TaskGraph, unit: MatrixUnitConfig,
+                   platform: CpuPlatform = SHUTTLE,
+                   vector_unit: VectorUnit = SATURN_512,
+                   machine: Optional[Machine] = None) -> DESimResult:
+    """Run ``graph`` to completion; returns timelines + utilization."""
+    nodes = graph.topo_order()
+    machine = machine or build_machine(unit, platform, vector_unit)
+    loop = machine.loop
+
+    remaining = {n.nid: len(n.deps) for n in nodes}
+    dependents: "dict[int, list[Node]]" = {n.nid: [] for n in nodes}
+    for n in nodes:
+        for d in n.deps:
+            dependents[d].append(n)
+    span: "dict[int, tuple[float, float]]" = {}
+    started: "dict[int, float]" = {}
+
+    def complete(node: Node) -> None:
+        span[node.nid] = (started[node.nid], loop.now)
+        for succ in dependents[node.nid]:
+            remaining[succ.nid] -= 1
+            if remaining[succ.nid] == 0:
+                start(succ)
+
+    def start(node: Node) -> None:
+        started[node.nid] = loop.now
+        if node.kind == "matmul":
+            _run_matmul(machine, node, lambda: complete(node))
+        elif node.kind == "vector":
+            cyc = machine.vector_unit.cycles_for(node.vector_ops)
+            machine.vector.busy(cyc, node.name, then=lambda: complete(node))
+        elif node.kind == "memory":
+            cyc = node.mem_bytes / machine.bytes_per_cycle
+            machine.loader.busy(cyc, node.name, then=lambda: complete(node))
+        else:
+            raise ValueError(f"unknown node kind {node.kind!r}")
+
+    for n in nodes:                      # sources, in program order
+        if remaining[n.nid] == 0:
+            loop.after(0.0, (lambda nn: lambda: start(nn))(n))
+
+    makespan = loop.run()
+    if len(span) != len(nodes):
+        stuck = [n.nid for n in nodes if n.nid not in span]
+        raise RuntimeError(f"graph deadlocked; unfinished nodes {stuck[:8]}")
+
+    ideal = sum(n.task.macs / unit.macs_per_cycle(n.task.data_type)
+                for n in nodes if n.kind == "matmul")
+    return DESimResult(
+        cycles=makespan, ideal_matrix_cycles=ideal, node_span=span,
+        intervals={r.name: r.intervals for r in machine.resources()},
+        capacity={r.name: r.capacity for r in machine.resources()},
+        freq_hz=unit.freq_hz)
+
+
+def _run_matmul(machine: Machine, node: Node, done) -> None:
+    """dispatch → bank → load → compute → (writeback ‖ poll) → done."""
+    c = tile_costs(machine, node)
+    platform = machine.platform
+    label = node.name
+
+    bank_start = [0.0]
+
+    def after_dispatch():
+        def granted():
+            bank_start[0] = machine.loop.now
+            machine.loader.busy(c["load"], label, then=run_pe)
+
+        machine.banks.acquire(granted)
+
+    def run_pe():
+        machine.pe.busy(c["compute"], label, then=finish)
+
+    def finish():
+        # A/B bank held from load start to compute end, then freed.
+        machine.banks.intervals.append((bank_start[0], machine.loop.now,
+                                        label))
+        machine.banks.release()
+        machine.loader.busy(c["writeback"], label + "/wb")
+        # Result usable after the PE pipeline drains; the CPU then owes a
+        # checkMatmul poll before dependents (vector epilogues) may issue.
+        machine.loop.after(
+            machine.unit.pe_pipeline_stages,
+            lambda: machine.dispatcher.busy(
+                platform.check_cycles, label + "/chk", then=done))
+
+    machine.dispatcher.busy(platform.dispatch_cycles, label + "/disp",
+                            then=after_dispatch)

@@ -1,0 +1,303 @@
+"""Lowerings in and out of the TaskGraph IR.
+
+In:  ``layer_to_graph`` / ``workload_to_graph`` convert the analytical
+model's :class:`~repro.core.simulator.LayerTrace` records (and anything
+built on ``MatMulTask``) into dependency-linked TaskGraphs, fused
+(Listing 1: per-tile epilogues overlap the matrix stream) or unfused
+(vector phase after all tiles, with the DRAM round-trip of the
+intermediate as an explicit memory node).
+
+Out (machine): ``desim_layer`` / ``desim_workload`` run the graphs on
+the discrete-event machine and report the same dict shape as
+``simulate_layer`` / ``simulate_workload`` so callers can swap engines.
+
+Out (JAX): ``execute_graph_jax`` walks the *same* graph and executes it
+through ``AsyncMatmulEngine``/``cute_matmul`` — matrix nodes dispatch
+accumulator-tile matmuls, vector nodes apply the fused epilogue — which
+is the paper's unified-software-stack claim made literal: one IR, one
+schedule, two targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import MatrixUnitConfig
+from repro.core.engine import AsyncMatmulEngine
+from repro.core.fusion import (Epilogue, EpilogueOperands, NO_OPERANDS,
+                               _infer_policy, apply_epilogue)
+from repro.core.hardware import CpuPlatform, SHUTTLE
+from repro.core.simulator import (LayerTrace, SATURN_512,
+                                  VECTOR_OP_INSTRS, VectorUnit)
+from repro.core.task import BiasType, MatMulTask
+from repro.sim.desim import DESimResult, simulate_graph
+from repro.sim.graph import (Granularity, Node, TaskGraph, build_gemm_graph,
+                             group_tiles)
+
+
+# ---------------------------------------------------------------------------
+# LayerTrace -> TaskGraph.
+# ---------------------------------------------------------------------------
+
+def layer_to_graph(unit: MatrixUnitConfig, layer: LayerTrace, *,
+                   fused: bool = True,
+                   granularity: Granularity = Granularity.TILE,
+                   platform: CpuPlatform = SHUTTLE,
+                   graph: Optional[TaskGraph] = None,
+                   deps=()) -> "tuple[TaskGraph, list[Node]]":
+    """One LayerTrace execution (repeat is handled by the caller).
+
+    Fused: the layer's vector work is spread over epilogue nodes at the
+    requested granularity, so it streams behind the matrix tiles.
+    Unfused: every tile completes, the intermediate (beyond the L2
+    working set) round-trips DRAM as a memory node, then one vector node
+    runs the whole epilogue phase.
+    """
+    graph = graph if graph is not None else TaskGraph()
+    tiles: "list[Node]" = []
+    gemm_groups: "list[list[Node]]" = []     # granularity applied per GEMM
+    for gi, g in enumerate(layer.gemms):
+        graph, t = build_gemm_graph(
+            g, unit.m_scp, unit.n_scp, graph=graph, deps=deps,
+            layer=f"{layer.name}/g{gi}")
+        tiles.extend(t)
+        gemm_groups.extend(group_tiles(t, granularity, g.n, unit.n_scp))
+    if not layer.vector_ops:
+        return graph, tiles
+
+    if fused:
+        groups = [tiles] if granularity == Granularity.LAYER else gemm_groups
+        share = {op: n / len(groups) for op, n in layer.vector_ops.items()}
+        vecs = [graph.add("vector", f"{layer.name}/vec{i}",
+                          deps=tuple(t.nid for t in grp), layer=layer.name,
+                          vector_ops=dict(share))
+                for i, grp in enumerate(groups)]
+        return graph, vecs
+
+    spill = max(0.0, layer.intermediate_bytes - platform.l2_bytes)
+    vdeps = [t.nid for t in tiles]
+    if spill > 0:
+        # store + reload of the intermediate through the memory loader.
+        mem = graph.add("memory", f"{layer.name}/spill",
+                        deps=tuple(vdeps), layer=layer.name,
+                        mem_bytes=2.0 * spill)
+        vdeps = [mem.nid]
+    vec = graph.add("vector", f"{layer.name}/vec", deps=tuple(vdeps),
+                    layer=layer.name, vector_ops=dict(layer.vector_ops))
+    return graph, [vec]
+
+
+def workload_to_graph(unit: MatrixUnitConfig, layers: "list[LayerTrace]", *,
+                      fused: bool = True,
+                      granularity: Granularity = Granularity.TILE,
+                      platform: CpuPlatform = SHUTTLE,
+                      expand_repeat: bool = False) -> TaskGraph:
+    """Chain layers into one TaskGraph (layer i+1 consumes layer i's
+    output, so its tiles depend on layer i's sinks).  ``expand_repeat``
+    instantiates ``layer.repeat`` copies; by default one instance per
+    unique layer is emitted (the DES multiplies, like the analytical
+    model)."""
+    graph = TaskGraph()
+    deps: "list[int]" = []
+    for layer in layers:
+        for _ in range(layer.repeat if expand_repeat else 1):
+            graph, sinks = layer_to_graph(
+                unit, layer, fused=fused, granularity=granularity,
+                platform=platform, graph=graph, deps=tuple(deps))
+            deps = [s.nid for s in sinks]
+    return graph
+
+
+# ---------------------------------------------------------------------------
+# DES-backed equivalents of simulate_layer / simulate_workload.
+# ---------------------------------------------------------------------------
+
+def desim_layer(unit: MatrixUnitConfig, layer: LayerTrace, *,
+                platform: CpuPlatform = SHUTTLE,
+                vector: VectorUnit = SATURN_512,
+                fused: bool = True,
+                granularity: Granularity = Granularity.TILE,
+                ) -> "dict[str, float]":
+    graph, _ = layer_to_graph(unit, layer, fused=fused,
+                              granularity=granularity, platform=platform)
+    r = simulate_graph(graph, unit, platform, vector)
+    return {"cycles": r.cycles * layer.repeat,
+            "matrix": r.busy("pe_array") * layer.repeat,
+            "vector": r.busy("vector_unit") * layer.repeat,
+            "result": r}
+
+
+def desim_workload(unit: MatrixUnitConfig, layers: "list[LayerTrace]", *,
+                   platform: CpuPlatform = SHUTTLE,
+                   vector: VectorUnit = SATURN_512,
+                   fused: bool = True,
+                   granularity: Granularity = Granularity.TILE,
+                   ) -> "dict[str, float]":
+    tot = {"cycles": 0.0, "matrix": 0.0, "vector": 0.0}
+    ideal = 0.0
+    for layer in layers:
+        r = desim_layer(unit, layer, platform=platform, vector=vector,
+                        fused=fused, granularity=granularity)
+        for k in tot:
+            tot[k] += r[k]
+        ideal += r["result"].ideal_matrix_cycles * layer.repeat
+    tot["seconds"] = tot["cycles"] / unit.freq_hz
+    tot["flops"] = sum(l.flops() for l in layers)
+    tot["matrix_utilization"] = ideal / tot["cycles"] if tot["cycles"] else 0.0
+    return tot
+
+
+def desim_gemm(unit: MatrixUnitConfig, task: MatMulTask,
+               platform: CpuPlatform = SHUTTLE,
+               vector: VectorUnit = SATURN_512) -> DESimResult:
+    """Bare GEMM through the DES (the Fig. 6 experiment shape)."""
+    graph, _ = build_gemm_graph(task, unit.m_scp, unit.n_scp)
+    return simulate_graph(graph, unit, platform, vector)
+
+
+def exposed_dispatch(unit: MatrixUnitConfig, task: MatMulTask,
+                     platform: CpuPlatform,
+                     vector: VectorUnit = SATURN_512) -> float:
+    """Cycles the CPU interface adds to the makespan: simulated time
+    minus the same graph on an idealised zero-cost interface.  The
+    CSR-mailbox platform (Kunminghu) exposes far more than RoCC ones in
+    tile streams whose per-tile service time is comparable to the
+    dispatch cost (paper Table 3 / §4.4)."""
+    real = desim_gemm(unit, task, platform, vector).cycles
+    free = dataclasses.replace(platform, dispatch_cycles=0, check_cycles=0)
+    return real - desim_gemm(unit, task, free, vector).cycles
+
+
+# ---------------------------------------------------------------------------
+# TaskGraph -> JAX execution (the same graph, run for real).
+# ---------------------------------------------------------------------------
+
+def _slice_operands(ops: EpilogueOperands, ep: Epilogue,
+                    m0: int, m: int, n0: int, n: int) -> EpilogueOperands:
+    def cut(x, sl):
+        return None if x is None else x[sl]
+    bias = ops.bias
+    if bias is not None:
+        bias = bias[n0:n0 + n] if ep.bias_type == BiasType.ROW \
+            else bias[m0:m0 + m, n0:n0 + n]
+    return EpilogueOperands(
+        bias=bias,
+        scale_a=cut(ops.scale_a, slice(m0, m0 + m)),
+        scale_b=cut(ops.scale_b, slice(n0, n0 + n)),
+        residual=None if ops.residual is None
+        else ops.residual[m0:m0 + m, n0:n0 + n])
+
+
+def execute_graph_jax(graph: TaskGraph, a: jax.Array, b: jax.Array, *,
+                      operands: EpilogueOperands = NO_OPERANDS,
+                      engine: Optional[AsyncMatmulEngine] = None) -> jax.Array:
+    """Execute a single-GEMM TaskGraph on real arrays.
+
+    Matrix nodes fire ``asyncMatMul`` (accumulator-precision tiles, no
+    epilogue — the matrix unit's output); vector nodes force the handles
+    they depend on (``checkMatmul``) and apply their ``Epilogue`` to the
+    assembled region.  Node order is the graph's program order, so the
+    schedule the DES times is the schedule JAX traces.
+    """
+    engine = engine or AsyncMatmulEngine()
+    policy = _infer_policy(a)
+    tiles = graph.matmul_nodes()
+    if not tiles:
+        raise ValueError("graph has no matmul nodes")
+    gemms = {t.layer for t in tiles}
+    if len(gemms) > 1:
+        raise ValueError(
+            f"graph spans {len(gemms)} GEMMs ({sorted(gemms)[:3]}...); "
+            "execute_graph_jax runs single-GEMM graphs — lower each "
+            "layer GEMM separately")
+    m_total = max(t.tile.m0 + t.tile.m for t in tiles)
+    n_total = max(t.tile.n0 + t.tile.n for t in tiles)
+
+    acc_ep = Epilogue(out_dtype=policy.accum_dtype)   # exact accumulators
+    handles: "dict[int, object]" = {}
+    acc_parts: "dict[int, jax.Array]" = {}
+    out = None
+    for node in graph.topo_order():
+        if node.kind == "matmul":
+            c = node.tile
+            a_t = a[c.m0:c.m0 + c.m, :]
+            b_t = b[:, c.n0:c.n0 + c.n]
+            handles[node.nid] = engine.dispatch(node.task, a_t, b_t,
+                                                epilogue=acc_ep)
+        elif node.kind == "vector":
+            ep = node.epilogue
+            if ep is None:
+                continue                      # cost-only node (sim graphs)
+            if ep.out_dtype is None:
+                ep = dataclasses.replace(ep, out_dtype=policy.output_dtype)
+            dep_tiles = [graph.nodes[d] for d in node.deps
+                         if graph.nodes[d].kind == "matmul"]
+            m_lo = min(t.tile.m0 for t in dep_tiles)
+            m_hi = max(t.tile.m0 + t.tile.m for t in dep_tiles)
+            n_lo = min(t.tile.n0 for t in dep_tiles)
+            n_hi = max(t.tile.n0 + t.tile.n for t in dep_tiles)
+            if ep.glu and (n_lo != 0 or n_hi != n_total):
+                raise ValueError("GLU epilogues need a full-N region; use "
+                                 "PANEL or LAYER granularity")
+            region = jnp.zeros((m_hi - m_lo, n_hi - n_lo), policy.accum_dtype)
+            for t in dep_tiles:
+                acc = engine.wait(handles[t.nid])     # checkMatmul
+                region = region.at[
+                    t.tile.m0 - m_lo:t.tile.m0 - m_lo + t.tile.m,
+                    t.tile.n0 - n_lo:t.tile.n0 - n_lo + t.tile.n].set(acc)
+            part = apply_epilogue(
+                region, ep, _slice_operands(operands, ep, m_lo,
+                                            m_hi - m_lo, n_lo, n_hi - n_lo))
+            if out is None:
+                n_out = n_total // 2 if ep.glu else n_total
+                out = jnp.zeros((m_total, n_out), part.dtype)
+            out = out.at[m_lo:m_hi, (n_lo // 2 if ep.glu else n_lo):
+                         (n_lo // 2 if ep.glu else n_lo) + part.shape[-1]
+                         ].set(part)
+        # memory nodes are simulation-only: nothing to execute.
+
+    if out is None:                           # no epilogue nodes: raw acc
+        out = jnp.zeros((m_total, n_total), policy.accum_dtype)
+        for t in tiles:
+            acc = engine.wait(handles[t.nid])
+            out = out.at[t.tile.m0:t.tile.m0 + t.tile.m,
+                         t.tile.n0:t.tile.n0 + t.tile.n].set(acc)
+        out = out.astype(policy.output_dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Epilogue -> abstract Saturn costs, so one graph carries both payloads.
+# ---------------------------------------------------------------------------
+
+def epilogue_vector_ops(ep: Epilogue, m: int, n: int) -> "dict[str, float]":
+    """First-order Saturn cost of applying ``ep`` to an (m, n) tile —
+    lets ``build_gemm_graph`` attach both the JAX payload and the sim
+    cost to the same vector nodes."""
+    elems = float(m * n)
+    ops: "dict[str, float]" = {}
+
+    def add(op, n_el):
+        ops[op] = ops.get(op, 0.0) + n_el
+
+    if ep.has_scale_a or ep.has_scale_b:
+        add("dequant", elems)
+    if ep.bias_type != BiasType.ZERO:
+        add("bias", elems)
+    if ep.softcap:
+        add("softcap", elems)
+    act_elems = elems / 2 if ep.glu else elems
+    if ep.activation != "none":
+        add(ep.activation if ep.activation in VECTOR_OP_INSTRS else
+            "eltwise_misc", act_elems)
+    if ep.glu:
+        add("glu_mul", elems / 2)
+    if ep.has_residual:
+        add("residual", act_elems if ep.glu else elems)
+    if not ops:
+        add("copy", elems)
+    return ops

@@ -1,0 +1,92 @@
+"""A minimal discrete-event simulation kernel + resource primitives.
+
+``EventLoop`` is a classic calendar-queue DES driver: callbacks are
+scheduled at absolute times (cycles, floats) and run in time order, with
+insertion order breaking ties — which keeps program order deterministic
+when many tasks become ready in the same cycle.
+
+``Resource`` is a capacity-limited server with a FIFO wait queue.  Every
+occupancy is recorded as a ``(start, end, label)`` interval, which is
+what the utilization report and the Chrome-trace exporter consume.  The
+scratchpad's double-buffered banks are just a ``Resource`` with
+``capacity = scratchpad_banks`` held across a tile's load+compute span.
+"""
+
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from typing import Callable, Optional
+
+
+class EventLoop:
+    def __init__(self):
+        self.now = 0.0
+        self._heap: "list[tuple[float, int, Callable[[], None]]]" = []
+        self._seq = 0
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        if time < self.now:
+            raise ValueError(f"cannot schedule at {time} < now {self.now}")
+        heapq.heappush(self._heap, (time, self._seq, fn))
+        self._seq += 1
+
+    def after(self, delay: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + delay, fn)
+
+    def run(self, max_events: int = 50_000_000) -> float:
+        n = 0
+        while self._heap:
+            self.now, _, fn = heapq.heappop(self._heap)
+            fn()
+            n += 1
+            if n > max_events:
+                raise RuntimeError("event budget exhausted (cycle in graph?)")
+        return self.now
+
+
+class Resource:
+    """``capacity`` concurrent holders; FIFO beyond that."""
+
+    def __init__(self, loop: EventLoop, name: str, capacity: int = 1):
+        self.loop = loop
+        self.name = name
+        self.capacity = capacity
+        self._free = capacity
+        self._waiters: "deque[Callable[[], None]]" = deque()
+        self.intervals: "list[tuple[float, float, str]]" = []
+
+    # -- raw acquire / release ---------------------------------------------
+    def acquire(self, fn: Callable[[], None]) -> None:
+        """Call ``fn`` (same tick or later) once a slot is held."""
+        if self._free > 0:
+            self._free -= 1
+            fn()
+        else:
+            self._waiters.append(fn)
+
+    def release(self) -> None:
+        if self._waiters:
+            self._waiters.popleft()()
+        else:
+            self._free += 1
+            if self._free > self.capacity:
+                raise RuntimeError(f"{self.name}: release without acquire")
+
+    # -- the common occupy-for-duration pattern -----------------------------
+    def busy(self, duration: float, label: str,
+             then: Optional[Callable[[], None]] = None) -> None:
+        """Acquire → hold for ``duration`` → release → ``then()``."""
+
+        def _granted():
+            start = self.loop.now
+
+            def _done():
+                self.intervals.append((start, self.loop.now, label))
+                self.release()
+                if then is not None:
+                    then()
+
+            self.loop.after(duration, _done)
+
+        self.acquire(_granted)

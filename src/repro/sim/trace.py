@@ -1,0 +1,51 @@
+"""Chrome-trace (Trace Event Format) export of DESim timelines.
+
+The emitted JSON loads directly in Perfetto (https://ui.perfetto.dev)
+or chrome://tracing: one row per machine resource, one complete ("X")
+event per busy interval, timestamps in microseconds of simulated time.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.sim.desim import DESimResult
+
+#: stable row order in the viewer, dispatcher (the cause) on top.
+_RESOURCE_ORDER = ("dispatcher", "mem_loader", "scratchpad", "pe_array",
+                   "vector_unit")
+
+
+def chrome_trace(result: DESimResult, *, process_name: str = "cutev2-desim",
+                 ) -> dict:
+    """Trace Event Format dict: ``{"traceEvents": [...], ...}``."""
+    us_per_cycle = 1e6 / result.freq_hz
+    events = []
+    names = [r for r in _RESOURCE_ORDER if r in result.intervals]
+    names += [r for r in result.intervals if r not in names]
+    events.append({"name": "process_name", "ph": "M", "pid": 0,
+                   "args": {"name": process_name}})
+    for tid, rname in enumerate(names):
+        events.append({"name": "thread_name", "ph": "M", "pid": 0,
+                       "tid": tid, "args": {"name": rname}})
+        for start, end, label in result.intervals[rname]:
+            events.append({
+                "name": label, "cat": rname, "ph": "X", "pid": 0, "tid": tid,
+                "ts": start * us_per_cycle,
+                "dur": max(end - start, 0.0) * us_per_cycle,
+            })
+    return {
+        "traceEvents": events,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "total_cycles": result.cycles,
+            "matrix_utilization": result.matrix_utilization,
+            "resource_utilization": result.utilizations(),
+        },
+    }
+
+
+def dump_chrome_trace(result: DESimResult, path: str, **kw) -> str:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(result, **kw), f)
+    return path

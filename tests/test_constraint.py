@@ -1,6 +1,8 @@
 """Paper Eq.1/Eq.2 and the two-level constraint model."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import constraint
