@@ -13,18 +13,22 @@ import time
 
 ROWS = []
 
-#: "analytic" = closed-form core.simulator; "desim" = discrete-event
-#: task-graph runtime (repro.sim).  Set by --engine.
-ENGINE = "analytic"
+#: Backend-registry name of the modelling engine pricing table6/overlap
+#: ("analytical" = closed-form core.simulator, "desim" = discrete-event
+#: task-graph runtime; aliases like "analytic" accepted).  Set by
+#: --engine.
+ENGINE = "analytical"
 
 
 def workload_sim():
-    """The model-level simulator the --engine flag selects."""
-    if ENGINE == "desim":
-        from repro.sim.lower import desim_workload
-        return desim_workload
-    from repro.core.simulator import simulate_workload
-    return simulate_workload
+    """The model-level simulator the --engine registry lookup selects
+    (same signature as ``core.simulator.simulate_workload``)."""
+    from repro import backend
+    eng = backend.get(ENGINE)
+
+    def run(unit, layers, *, fused=True):
+        return eng.run_workload(layers, unit=unit, fused=fused)
+    return run
 
 
 def emit(name: str, us: float, derived: str):
@@ -370,13 +374,21 @@ def main() -> None:
     global ENGINE
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=tuple(BENCHES), default=None)
-    ap.add_argument("--engine", choices=("analytic", "desim"),
-                    default="analytic",
-                    help="model-level simulator for table6/overlap: "
-                         "closed-form or the discrete-event TaskGraph "
-                         "runtime (repro.sim)")
+    ap.add_argument("--engine", default="analytical",
+                    help="repro.backend registry name of the modelling "
+                         "engine for table6/overlap (aliases accepted): "
+                         "'analytical' (closed form) or 'desim' (the "
+                         "discrete-event TaskGraph runtime)")
     args = ap.parse_args()
-    ENGINE = args.engine
+    from repro import backend
+    try:
+        ENGINE = backend.resolve(args.engine)
+    except KeyError as e:
+        ap.error(str(e))
+    if not backend.get(ENGINE).models_time:
+        ap.error(f"--engine {ENGINE!r} executes numbers but does not "
+                 "model time; pick one of "
+                 f"{[n for n in backend.available() if backend.get(n).models_time]}")
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and name != args.only:

@@ -1,15 +1,19 @@
-"""One TaskGraph, two backends: simulate it, execute it, dump a timeline.
+"""One MatMulTask, three backends: dispatch it, simulate it, execute it.
 
     PYTHONPATH=src python examples/sim_timeline.py [--out trace.json]
 
-Builds a Llama-style fused Gate/Up layer as a TaskGraph (matrix tiles +
-per-tile SiLU-GLU epilogues), then:
+Builds a Llama-style fused Gate/Up projection as one ``MatMulTask`` and
+drives it through the unified ``repro.backend`` contract:
 
-1. runs it on the discrete-event machine model for each of the four CPU
-   platforms and prints per-resource utilization + overlap attribution;
-2. executes the *same* graph through AsyncMatmulEngine/cute_matmul on
-   JAX and checks it against the direct fused matmul;
-3. exports the simulated timeline as Chrome-trace JSON — open it at
+1. ``backend.get("desim")`` — ``dispatch``/``wait`` (asyncMatMul /
+   checkMatmul) on the discrete-event machine model for each of the four
+   CPU platforms: per-resource utilization + overlap attribution;
+2. ``backend.get("jax")`` — the *same* TaskGraph executed for real
+   through AsyncMatmulEngine/cute_matmul, checked against the direct
+   fused matmul;
+3. ``backend.get("analytical")`` — the closed-form makespan, cross-
+   checked against the DES-derived one (the parity the test suite pins);
+4. exports the simulated timeline as Chrome-trace JSON — open it at
    https://ui.perfetto.dev (or chrome://tracing) to see the dispatcher,
    memory loader, scratchpad banks, PE array and vector unit lanes.
 """
@@ -22,14 +26,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import jax.numpy as jnp
 
-from repro.core.config import CASE_STUDY
+from repro import backend
 from repro.core.fusion import Epilogue, cute_matmul
-from repro.core.hardware import PLATFORMS, SHUTTLE
+from repro.core.hardware import PLATFORMS
 from repro.core.simulator import LayerTrace
 from repro.core.task import MatMulTask
-from repro.sim import (Granularity, build_gemm_graph, chrome_trace,
-                       desim_layer, dump_chrome_trace, execute_graph_jax,
-                       simulate_graph)
+from repro.sim import chrome_trace, dump_chrome_trace
 from repro.sim.lower import epilogue_vector_ops
 
 
@@ -44,48 +46,55 @@ def main():
     m, n, k = 256, 512, 1024
     ep = Epilogue(activation="silu", glu=True, out_dtype=jnp.float32)
     task = MatMulTask(m=m, n=n, k=k)              # int8, the paper default
-    graph, _ = build_gemm_graph(
-        task, CASE_STUDY.m_scp, CASE_STUDY.n_scp,
-        granularity=Granularity.PANEL,           # full-N panels (GLU needs N)
-        vector_ops=epilogue_vector_ops(ep, m, n), epilogue=ep)
-    print(f"TaskGraph: {graph.stats()}")
 
-    # 1. Discrete-event simulation on the four integration platforms ------
-    print(f"\n{'platform':<12}{'cycles':>10}{'pe':>7}{'vec':>7}"
+    # 1. asyncMatMul on the DES backend, one per integration platform ----
+    #    (PANEL granularity: GLU epilogues need full-N regions).
+    print(f"{'platform':<12}{'cycles':>10}{'pe':>7}{'vec':>7}"
           f"{'loader':>8}{'disp':>7}")
     results = {}
     for name, platform in PLATFORMS.items():
-        r = simulate_graph(graph, CASE_STUDY, platform)
+        eng = backend.get("desim", platform=platform, granularity="panel")
+        handle = eng.dispatch(task, epilogue=ep)      # asyncMatMul
+        r = eng.wait(handle)                          # checkMatmul
         results[name] = r
-        u = r.utilizations()
+        u = r.detail["utilizations"]
         print(f"{name:<12}{r.cycles:>10.0f}{u['pe_array']:>7.1%}"
               f"{u['vector_unit']:>7.1%}{u['mem_loader']:>8.1%}"
               f"{u['dispatcher']:>7.1%}")
 
-    # Overlap attribution: same graph, vector nodes after all tiles.
+    # Overlap attribution: the same layer, fused vs unfused schedule.
+    desim = backend.get("desim", granularity="panel")
     layer = LayerTrace("gate_up", (task,),
                        vector_ops=epilogue_vector_ops(ep, m, n),
                        intermediate_bytes=4.0 * m * n)
-    fused = desim_layer(CASE_STUDY, layer, fused=True,
-                        granularity=Granularity.PANEL)
-    unfused = desim_layer(CASE_STUDY, layer, fused=False)
+    fused = desim.run_workload([layer], fused=True)
+    unfused = desim.run_workload([layer], fused=False)
     print(f"\nfused {fused['cycles']:.0f} vs unfused {unfused['cycles']:.0f} "
           f"cycles -> overlap speedup "
           f"{unfused['cycles'] / fused['cycles']:.2f}x")
 
-    # 2. The same graph, executed for real through the async engine -------
+    # 2. The same graph, executed for real by the jax backend -------------
+    graph = desim.lower(task, epilogue=ep)
     ka, kb = jax.random.split(jax.random.PRNGKey(0))
     a = jax.random.randint(ka, (m, k), -8, 8, jnp.int8)
     b = jax.random.randint(kb, (k, n), -8, 8, jnp.int8)
-    out = execute_graph_jax(graph, a, b)
+    out = backend.get("jax").run_graph(
+        graph, backend.MatMulOperands(a=a, b=b)).output
     ref = cute_matmul(a, b, epilogue=ep)
-    print(f"JAX lowering of the graph: out {out.shape}, "
+    print(f"jax backend on the same graph: out {out.shape}, "
           f"max |Δ| vs cute_matmul = {float(jnp.abs(out - ref).max()):.2e}")
 
-    # 3. Chrome-trace export ----------------------------------------------
-    path = dump_chrome_trace(results["shuttle"], args.out,
+    # 3. Closed-form cross-check ------------------------------------------
+    analytical = backend.get("analytical", granularity="panel")
+    ra = analytical.run_graph(graph)
+    rd = results["shuttle"]
+    print(f"analytical backend: {ra.cycles:.0f} cycles "
+          f"({ra.cycles / rd.cycles - 1.0:+.2%} vs desim)")
+
+    # 4. Chrome-trace export ----------------------------------------------
+    path = dump_chrome_trace(rd.timeline, args.out,
                              process_name="cutev2-desim shuttle gate_up")
-    n_events = len(chrome_trace(results["shuttle"])["traceEvents"])
+    n_events = len(chrome_trace(rd.timeline)["traceEvents"])
     print(f"\nwrote {n_events} trace events to {path} "
           f"- open in https://ui.perfetto.dev")
 

@@ -1,6 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 verification: the command CI and the roadmap agree on.
+# Tier-1 verification: the command CI and the roadmap agree on, plus a
+# backend-registry smoke run (benchmarks/run.py --engine is a
+# repro.backend lookup, and table6 prices workloads through
+# Backend.run_workload; regressions there should fail CI, not only
+# interactive runs).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+python -m benchmarks.run --only table6 --engine desim

@@ -1,0 +1,58 @@
+"""``repro.backend`` — pluggable execution engines behind one contract.
+
+The paper's asyncMatMul/checkMatmul programming model is the seam that
+lets one software stack target four CPUs; this package is that seam for
+the reproduction.  One :class:`~repro.backend.base.Backend` protocol —
+``dispatch(task, operands) -> handle``, ``check(handle)``,
+``wait(handle)``, ``run_graph(TaskGraph)`` — with first-class
+granularity (``tile | panel | layer``) and epilogue fusion, and four
+registered implementations:
+
+======================  ====================================================
+``get("jax")``          eager XLA execution (``AsyncMatmulEngine`` /
+                        ``cute_matmul``) — numbers, no cycles
+``get("pallas")``       the ``kernels/matmul`` fused Pallas kernel —
+                        numbers via the grid-pipelined on-chip path
+``get("desim")``        the discrete-event machine model — per-resource
+                        timelines + Chrome traces, and (given operands)
+                        the numbers from executing the *same* graph
+``get("analytical")``   ``core.simulator`` closed forms — cycles only
+======================  ====================================================
+
+Every front door goes through the registry: ``serving.ServingEngine``
+lowers batch schedules here, ``benchmarks/run.py --engine`` is a registry
+lookup, the model zoo's ``linear`` resolves its matmul route here, and
+``examples/sim_timeline.py`` drives two backends with one graph.  A new
+engine (multi-core DES, sharded execution) is one ``@register`` away.
+
+Typical use::
+
+    from repro import backend
+    from repro.core.task import MatMulTask
+
+    b = backend.get("desim", granularity="panel")
+    h = b.dispatch(MatMulTask(m=512, n=512, k=4096))      # asyncMatMul
+    r = b.wait(h)                                         # checkMatmul
+    r.cycles, r.timeline                                  # DES payload
+"""
+
+from repro.backend.base import (Backend, DispatchHandle, ExecResult,
+                                MatMulOperands, NO_MATMUL_OPERANDS)
+from repro.backend.registry import (ALIASES, available,
+                                    default_matmul_backend, get,
+                                    matmul_backend_string, register,
+                                    resolve, set_default_matmul_backend)
+
+# Importing the implementation modules registers them.
+from repro.backend.eager import JaxBackend, PallasBackend
+from repro.backend.desim_backend import DESimBackend
+from repro.backend.analytical_backend import AnalyticalBackend
+
+__all__ = [
+    "Backend", "DispatchHandle", "ExecResult", "MatMulOperands",
+    "NO_MATMUL_OPERANDS",
+    "ALIASES", "available", "default_matmul_backend", "get",
+    "matmul_backend_string", "register", "resolve",
+    "set_default_matmul_backend",
+    "JaxBackend", "PallasBackend", "DESimBackend", "AnalyticalBackend",
+]

@@ -1,0 +1,138 @@
+"""The closed-form backend: ``core.simulator`` behind the same contract.
+
+``dispatch``/``run_graph`` price a TaskGraph with a closed-form pipeline
+model over the *same* per-tile costs the DES charges (``tile_costs``):
+per layer group, the steady state runs the slower of the matrix-tile
+stream ``max(compute, load+writeback)`` and the CPU dispatch stream,
+with the first load exposed as fill and the last compute/writeback/
+status-poll as drain; fused epilogues overlap as ``max(matrix, vector)``
+with one epilogue share exposed (paper Listing 1).  Where the desim
+backend *derives* the makespan from the event schedule, this backend
+asserts it — the cross-backend parity suite pins the two within ~1%.
+``run_workload`` is ``simulate_workload`` verbatim (the paper's
+model-level analytical numbers).  No array outputs are produced — this
+backend answers "how long", not "what".
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Callable
+
+from repro.backend.base import Backend, ExecResult, GraphOperands, \
+    MatMulOperands
+from repro.backend.registry import register
+from repro.core.fusion import Epilogue, NO_EPILOGUE
+from repro.core.task import MatMulTask
+
+_GEMM_SUFFIX = re.compile(r"/g\d+$")
+
+
+@register("analytical")
+class AnalyticalBackend(Backend):
+    """First-order cost estimates from the closed-form model."""
+
+    models_time = True
+
+    def _stage(self, task: MatMulTask, operands: MatMulOperands,
+               epilogue: Epilogue) -> Callable[[], ExecResult]:
+        ep = None if epilogue is NO_EPILOGUE else epilogue
+        graph = self.lower(task, epilogue=ep)
+        return lambda: self.run_graph(graph)
+
+    def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
+        """Closed-form makespan of a TaskGraph, mirroring the DES pipeline.
+
+        Nodes are grouped by layer (successive layers of a schedule graph
+        serialise on the dependency chain); within a group the matrix
+        stream is ``fill + Σ max(compute, load+writeback) + drain``
+        raced against the serial dispatch/check stream, and fused vector
+        work overlaps it as ``max(matrix, vector)`` plus one exposed
+        epilogue share.  Unfused groups (an explicit memory round-trip)
+        serialise matrix, memory and vector phases.
+        """
+        from repro.sim.desim import build_machine, tile_costs
+        machine = build_machine(self.unit, self.platform, self.vector)
+        plat = self.platform
+        groups: "dict[str, dict]" = {}
+        order: "list[str]" = []
+        ideal = 0.0
+        for node in graph.topo_order():
+            key = _GEMM_SUFFIX.sub("", node.layer)
+            if key not in groups:
+                groups[key] = {"tiles": [], "vec": 0.0, "n_vec": 0,
+                               "mem": 0.0}
+                order.append(key)
+            g = groups[key]
+            if node.kind == "matmul":
+                g["tiles"].append(tile_costs(machine, node))
+                ideal += (node.task.macs
+                          / self.unit.macs_per_cycle(node.task.data_type))
+            elif node.kind == "vector":
+                g["vec"] += self.vector.cycles_for(node.vector_ops)
+                g["n_vec"] += 1
+            elif node.kind == "memory":
+                g["mem"] += node.mem_bytes / machine.bytes_per_cycle
+
+        cycles = 0.0
+        detail = {"matrix": 0.0, "vector": 0.0, "memory": 0.0,
+                  "dispatch": 0.0, "groups": len(order)}
+        for key in order:
+            g = groups[key]
+            tiles, vec, mem = g["tiles"], g["vec"], g["mem"]
+            if not tiles:
+                cycles += vec + mem
+                detail["vector"] += vec
+                detail["memory"] += mem
+                continue
+            # Three streams race; the slower one carries the makespan.
+            # PE stream: first load exposed as fill, then back-to-back
+            # computes, then the last tile's writeback / pipeline drain.
+            last = tiles[-1]
+            pe_stream = (tiles[0]["load"]
+                         + sum(c["compute"] for c in tiles)
+                         + max(last["writeback"],
+                               self.unit.pe_pipeline_stages
+                               + plat.check_cycles))
+            # Loader stream: every load and writeback serialises through
+            # the memory loader; the last compute lands after the loads
+            # drain, overlapping the ~two writebacks still backlogged.
+            backlog = min(len(tiles) - 1, 2) * last["writeback"]
+            loader_stream = (sum(c["load"] + c["writeback"] for c in tiles)
+                             + max(0.0, last["compute"] - backlog))
+            dispatch = len(tiles) * (plat.dispatch_cycles
+                                     + plat.check_cycles)
+            matrix = plat.dispatch_cycles + max(pe_stream, loader_stream,
+                                                dispatch)
+            if g["n_vec"] > 1 and not mem:
+                # fused: the slower stream carries the group.  A compute-
+                # bound group exposes the last epilogue share after the
+                # final tile; a loader-bound group keeps draining queued
+                # writebacks meanwhile, hiding up to that backlog; a
+                # vector-bound group exposes the first tile as fill.
+                share = vec / g["n_vec"]
+                if loader_stream > max(pe_stream, dispatch):
+                    share = max(0.0, share - 3.0 * last["writeback"])
+                fill = (plat.dispatch_cycles + tiles[0]["load"]
+                        + tiles[0]["compute"])
+                cycles += max(matrix + share, fill + vec)
+            else:
+                # one epilogue after everything (LAYER granularity or an
+                # unfused round-trip): phases serialise.
+                cycles += matrix + vec + mem
+            detail["matrix"] += matrix
+            detail["vector"] += vec
+            detail["memory"] += mem
+            detail["dispatch"] += dispatch
+        return ExecResult(cycles=cycles, seconds=cycles / self.unit.freq_hz,
+                          utilization=ideal / cycles if cycles else 0.0,
+                          detail=detail)
+
+    def run_workload(self, layers, *, fused=None, unit=None, platform=None,
+                     vector=None):
+        from repro.core.simulator import simulate_workload
+        return simulate_workload(
+            unit or self.unit, layers,
+            platform=platform or self.platform,
+            vector=vector or self.vector,
+            fused=self.fused if fused is None else fused)

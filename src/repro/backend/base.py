@@ -1,0 +1,211 @@
+"""The unified execution contract: one ``asyncMatMul``, four engines.
+
+The paper's central software claim is that a single asynchronous matmul
+abstraction "conceals hardware details … and supports a unified software
+stack" across four CPU platforms.  :class:`Backend` is that abstraction
+for this repository: every engine — eager JAX, the Pallas fused kernel,
+the discrete-event machine model, the closed-form analytical model —
+implements the same four verbs with the paper's vocabulary:
+
+* ``dispatch(task, operands) -> DispatchHandle`` — ``asyncMatMul``:
+  fire one :class:`~repro.core.task.MatMulTask` and return immediately.
+  The task's ``Status`` interface register moves ``IDLE -> RUNNING``.
+* ``check(handle)`` — ``checkMatmul`` as a non-blocking poll of the
+  Status register.
+* ``wait(handle) -> ExecResult`` — force completion; the Status register
+  moves to ``DONE``.  Executing backends return numbers, modelling
+  backends return cycles/timelines, the desim backend returns both.
+* ``run_graph(graph, operands)`` — run a whole
+  :class:`~repro.sim.graph.TaskGraph` (the tiled, dependency-linked form
+  one logical matmul or a serving schedule lowers to).
+
+Granularity (``tile | panel | layer``) and epilogue fusion are
+first-class: every backend is constructed with a
+:class:`~repro.sim.graph.Granularity` and a ``fused`` flag, and
+``lower()`` applies them when tiling work into a TaskGraph — so the same
+``MatMulTask`` travels the whole stack unchanged and only the engine
+underneath differs.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Callable, Iterable, Optional, Union
+
+from repro.core.config import CASE_STUDY, MatrixUnitConfig
+from repro.core.fusion import (Epilogue, EpilogueOperands, NO_EPILOGUE,
+                               NO_OPERANDS)
+from repro.core.hardware import CpuPlatform, SHUTTLE
+from repro.core.simulator import LayerTrace, SATURN_512, VectorUnit
+from repro.core.task import MatMulTask, Status
+
+
+@dataclasses.dataclass(frozen=True)
+class MatMulOperands:
+    """Concrete arrays for one ``asyncMatMul``.
+
+    ``a``/``b`` are the matrix operands (symbolic — i.e. absent — under
+    the modelling backends, which read only the task descriptor);
+    ``epilogue`` carries the vector-side arrays (bias, dequant scales,
+    residual) the fused epilogue consumes.
+    """
+
+    a: object = None                       # (..., M, K) array
+    b: object = None                       # (K, N) array
+    epilogue: EpilogueOperands = NO_OPERANDS
+
+    @property
+    def concrete(self) -> bool:
+        return self.a is not None and self.b is not None
+
+
+NO_MATMUL_OPERANDS = MatMulOperands()
+
+#: ``run_graph`` operands: one (a, b[, epilogue ops]) for a single-GEMM
+#: graph, or {gemm label -> (a, b)} for a multi-GEMM schedule graph.
+GraphOperands = Union[MatMulOperands, "dict[str, tuple]", None]
+
+
+@dataclasses.dataclass
+class ExecResult:
+    """What ``wait``/``run_graph`` returns, across all backends.
+
+    Executing backends fill ``output``/``outputs``; modelling backends
+    fill ``cycles``/``seconds``/``utilization`` (+ ``timeline`` for the
+    DES).  The desim backend fills both when given concrete operands.
+    """
+
+    output: object = None                  # single-GEMM numeric result
+    outputs: "dict[str, object] | None" = None   # per-GEMM results (schedules)
+    cycles: Optional[float] = None         # modelled makespan
+    seconds: Optional[float] = None
+    utilization: Optional[float] = None    # matrix-unit utilization
+    timeline: object = None                # sim.desim.DESimResult
+    detail: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class DispatchHandle:
+    """The ``Status`` interface register, reified for any backend.
+
+    ``done()`` reads the task's Status register — the same word
+    ``checkMatmul`` polls in hardware — so a handle and its task can
+    never disagree about completion.
+    """
+
+    task: MatMulTask
+    _thunk: Callable[[], ExecResult]
+    _result: Optional[ExecResult] = None
+
+    def done(self) -> bool:
+        return self.task.status is Status.DONE
+
+    def force(self) -> ExecResult:
+        if self._result is None:
+            self._result = self._thunk()
+            self.task.status = Status.DONE
+        return self._result
+
+
+class Backend(abc.ABC):
+    """One execution engine behind the asyncMatMul contract."""
+
+    name: str = "abstract"
+    #: produces numeric outputs (JAX arrays)
+    executes: bool = False
+    #: produces cycle estimates / timelines
+    models_time: bool = False
+
+    def __init__(self, unit: MatrixUnitConfig = CASE_STUDY,
+                 platform: CpuPlatform = SHUTTLE,
+                 vector: VectorUnit = SATURN_512,
+                 granularity=None, fused: bool = True):
+        from repro.sim.graph import Granularity
+        self.unit = unit
+        self.platform = platform
+        self.vector = vector
+        self.granularity = Granularity(granularity or Granularity.TILE)
+        self.fused = fused
+        self.dispatched: "list[DispatchHandle]" = []
+
+    # ----- asyncMatMul / checkMatmul ---------------------------------------
+    def dispatch(self, task: MatMulTask,
+                 operands: Optional[MatMulOperands] = None, *,
+                 epilogue: Epilogue = NO_EPILOGUE) -> DispatchHandle:
+        """Fire one task; returns immediately with a handle."""
+        operands = operands or NO_MATMUL_OPERANDS
+        thunk = self._stage(task, operands, epilogue)
+        task.status = Status.RUNNING
+        handle = DispatchHandle(task, thunk)
+        self.dispatched.append(handle)
+        return handle
+
+    @abc.abstractmethod
+    def _stage(self, task: MatMulTask, operands: MatMulOperands,
+               epilogue: Epilogue) -> Callable[[], ExecResult]:
+        """Validate eagerly, compute lazily: return the forcing thunk."""
+
+    def check(self, handle: DispatchHandle) -> bool:
+        """Non-blocking ``checkMatmul`` poll."""
+        return handle.done()
+
+    def wait(self, handle: DispatchHandle) -> ExecResult:
+        return handle.force()
+
+    def drain(self) -> "list[ExecResult]":
+        """Force every outstanding handle, oldest first, and forget them."""
+        out = [h.force() for h in self.dispatched]
+        self.dispatched.clear()
+        return out
+
+    # ----- granularity-aware lowering --------------------------------------
+    def lower(self, work: "MatMulTask | Iterable[LayerTrace]", *,
+              epilogue: Optional[Epilogue] = None,
+              vector_ops: "dict[str, float] | None" = None):
+        """Tile ``work`` into a TaskGraph at this backend's granularity.
+
+        ``work`` is either one ``MatMulTask`` (with an optional fused
+        ``epilogue``, whose abstract Saturn cost is attached so the same
+        graph carries both payloads) or a list of ``LayerTrace``s (a
+        workload / serving schedule, chained with this backend's
+        ``fused`` policy via ``workload_to_graph``).
+        """
+        from repro.sim.lower import epilogue_vector_ops, workload_to_graph
+        from repro.sim.graph import build_gemm_graph
+        if isinstance(work, MatMulTask):
+            if epilogue is not None and vector_ops is None:
+                vector_ops = epilogue_vector_ops(epilogue, work.m, work.n)
+            graph, _ = build_gemm_graph(
+                work, self.unit.m_scp, self.unit.n_scp,
+                granularity=self.granularity, vector_ops=vector_ops,
+                epilogue=epilogue)
+            return graph
+        if epilogue is not None or vector_ops is not None:
+            raise ValueError(
+                "epilogue/vector_ops apply to a single MatMulTask; a "
+                "LayerTrace workload carries its own vector work")
+        return workload_to_graph(self.unit, list(work), fused=self.fused,
+                                 granularity=self.granularity,
+                                 platform=self.platform)
+
+    # ----- whole-graph / whole-workload entry points -----------------------
+    @abc.abstractmethod
+    def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
+        """Run a TaskGraph end to end."""
+
+    def run_workload(self, layers: "list[LayerTrace]", *,
+                     fused: Optional[bool] = None,
+                     unit: Optional[MatrixUnitConfig] = None,
+                     platform: Optional[CpuPlatform] = None,
+                     vector: Optional[VectorUnit] = None) -> "dict[str, float]":
+        """Model-level cost of a LayerTrace workload (modelling backends
+        only); same dict shape as ``core.simulator.simulate_workload``."""
+        raise NotImplementedError(
+            f"backend {self.name!r} executes numbers but has no workload "
+            "cost model; use backend.get('desim') or "
+            "backend.get('analytical')")
+
+    def __repr__(self) -> str:
+        return (f"<{type(self).__name__} {self.name!r} "
+                f"granularity={self.granularity.value} fused={self.fused}>")

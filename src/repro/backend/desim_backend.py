@@ -1,0 +1,60 @@
+"""The discrete-event backend: timelines *and* results from one graph.
+
+``dispatch``/``run_graph`` run the TaskGraph on the resource-level
+machine model (``sim.desim``) for the per-resource timeline, and — when
+concrete operands are supplied — execute the *same* graph through
+``execute_graph_jax``/``execute_workload_jax`` so the numbers come back
+alongside the cycles.  This is the paper's unified-stack claim made
+operational: one graph, one schedule, simulated and executed.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.backend.base import (Backend, ExecResult, GraphOperands,
+                                MatMulOperands)
+from repro.backend.registry import register
+from repro.core.fusion import Epilogue, NO_EPILOGUE
+from repro.core.task import MatMulTask
+
+
+@register("desim")
+class DESimBackend(Backend):
+    """Discrete-event machine model + optional lockstep JAX execution."""
+
+    executes = True
+    models_time = True
+    matmul_string = "xla"           # numeric half runs through XLA
+
+    def _stage(self, task: MatMulTask, operands: MatMulOperands,
+               epilogue: Epilogue) -> Callable[[], ExecResult]:
+        ep = None if epilogue is NO_EPILOGUE else epilogue
+        graph = self.lower(task, epilogue=ep)
+        return lambda: self.run_graph(
+            graph, operands if operands.concrete else None)
+
+    def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
+        from repro.sim.desim import simulate_graph
+        from repro.sim.lower import execute_graph_jax, execute_workload_jax
+        r = simulate_graph(graph, self.unit, self.platform, self.vector)
+        output, outputs = None, None
+        if isinstance(operands, dict):
+            outputs = execute_workload_jax(graph, operands)
+        elif operands is not None and operands.concrete:
+            output = execute_graph_jax(graph, operands.a, operands.b,
+                                       operands=operands.epilogue)
+        return ExecResult(output=output, outputs=outputs, cycles=r.cycles,
+                          seconds=r.seconds(),
+                          utilization=r.matrix_utilization, timeline=r,
+                          detail={"utilizations": r.utilizations()})
+
+    def run_workload(self, layers, *, fused=None, unit=None, platform=None,
+                     vector=None):
+        from repro.sim.lower import desim_workload
+        return desim_workload(
+            unit or self.unit, layers,
+            platform=platform or self.platform,
+            vector=vector or self.vector,
+            fused=self.fused if fused is None else fused,
+            granularity=self.granularity)

@@ -1,0 +1,73 @@
+"""Executing backends: eager JAX (XLA) and the Pallas fused kernel.
+
+Both wrap :class:`~repro.core.engine.AsyncMatmulEngine` — dispatch stages
+a thunk, wait forces it — and differ only in which ``cute_matmul`` route
+the thunk takes.  ``run_graph`` walks a TaskGraph through
+``execute_graph_jax`` (single GEMM, fused epilogues applied at the
+graph's granularity) or ``execute_workload_jax`` (multi-GEMM schedule
+graphs, one ``(a, b)`` pair per GEMM label).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+from repro.backend.base import (Backend, ExecResult, GraphOperands,
+                                MatMulOperands, NO_MATMUL_OPERANDS)
+from repro.backend.registry import register
+from repro.core.engine import AsyncMatmulEngine
+from repro.core.fusion import Epilogue
+from repro.core.task import MatMulTask
+
+
+class _EagerBackend(Backend):
+    """Shared dispatch/run_graph plumbing for the executing backends."""
+
+    executes = True
+    matmul_string = "xla"          # the cute_matmul(backend=...) route
+
+    def __init__(self, **kw):
+        super().__init__(**kw)
+        self._engine = AsyncMatmulEngine(unit=self.unit,
+                                         backend=self.matmul_string)
+
+    def _stage(self, task: MatMulTask, operands: MatMulOperands,
+               epilogue: Epilogue) -> Callable[[], ExecResult]:
+        if not operands.concrete:
+            raise ValueError(
+                f"backend {self.name!r} executes numbers: dispatch needs "
+                "MatMulOperands(a=..., b=...)")
+        h = self._engine.dispatch(task, operands.a, operands.b,
+                                  epilogue=epilogue,
+                                  operands=operands.epilogue)
+        return lambda: ExecResult(output=h.force())
+
+    def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
+        from repro.sim.lower import execute_graph_jax, execute_workload_jax
+        engine = AsyncMatmulEngine(unit=self.unit, backend=self.matmul_string)
+        if isinstance(operands, dict):
+            outs = execute_workload_jax(graph, operands, engine=engine)
+            return ExecResult(outputs=outs)
+        ops = operands or NO_MATMUL_OPERANDS
+        if not ops.concrete:
+            raise ValueError(
+                f"backend {self.name!r} needs concrete operands: pass "
+                "MatMulOperands(a, b) or a {gemm label: (a, b)} dict")
+        out = execute_graph_jax(graph, ops.a, ops.b, operands=ops.epilogue,
+                                engine=engine)
+        return ExecResult(output=out)
+
+
+@register("jax")
+class JaxBackend(_EagerBackend):
+    """Eager execution through einsum + fused-consumer epilogue (XLA)."""
+
+    matmul_string = "xla"
+
+
+@register("pallas")
+class PallasBackend(_EagerBackend):
+    """Execution through the ``kernels/matmul`` fused Pallas kernel
+    (grid-pipelined MXU/VPU overlap on TPU; interpret mode on CPU)."""
+
+    matmul_string = "pallas"

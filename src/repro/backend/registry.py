@@ -1,0 +1,83 @@
+"""Backend registry: names -> Backend classes, plus the zoo's default.
+
+``get("desim", unit=..., granularity="panel")`` is the one lookup every
+front door (serving, launch, benchmarks, examples, tests) goes through;
+registering a new engine (multi-core DES, sharded execution, ...) is a
+``@register("name")`` decoration away and every front door picks it up.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Type
+
+from repro.backend.base import Backend
+
+_REGISTRY: "dict[str, Type[Backend]]" = {}
+
+#: spelling compatibility: old benchmark/engine names -> registry names.
+ALIASES = {"analytic": "analytical", "xla": "jax"}
+
+
+def register(name: str) -> Callable[[Type[Backend]], Type[Backend]]:
+    def deco(cls: Type[Backend]) -> Type[Backend]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def resolve(name: str) -> str:
+    canon = ALIASES.get(name, name)
+    if canon not in _REGISTRY:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {available()}")
+    return canon
+
+
+def get(name: str, **kwargs) -> Backend:
+    """Instantiate a registered backend by name (aliases accepted)."""
+    return _REGISTRY[resolve(name)](**kwargs)
+
+
+def available() -> "tuple[str, ...]":
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# The model zoo's matmul route.  ``core.fusion.linear`` calls are resolved
+# through here so the zoo speaks registry vocabulary; the default stays on
+# the eager jax backend because Pallas-everywhere is too slow under
+# interpret mode on CPU for whole-model tests (per-kernel coverage lives
+# in tests/).
+# ---------------------------------------------------------------------------
+
+_DEFAULT_MATMUL = "jax"
+
+
+def set_default_matmul_backend(name: str) -> str:
+    """Route the model zoo's ``linear``/``cute_matmul`` calls through a
+    different executing backend.  Returns the previous setting."""
+    global _DEFAULT_MATMUL
+    canon = resolve(name)
+    cls = _REGISTRY[canon]
+    if not cls.executes or cls.models_time:
+        raise ValueError(
+            f"backend {canon!r} is not an eager matmul route for the "
+            "model zoo; use 'jax' or 'pallas' (modelling backends price "
+            "schedules, they don't serve projections)")
+    prev, _DEFAULT_MATMUL = _DEFAULT_MATMUL, canon
+    return prev
+
+
+def default_matmul_backend() -> str:
+    return _DEFAULT_MATMUL
+
+
+def matmul_backend_string(name: Optional[str] = None) -> str:
+    """The ``cute_matmul(backend=...)`` string for a registry name
+    (default: the zoo-wide setting)."""
+    cls = _REGISTRY[resolve(name or _DEFAULT_MATMUL)]
+    s = getattr(cls, "matmul_string", None)
+    if s is None:
+        raise ValueError(f"backend {cls.name!r} has no cute_matmul route")
+    return s

@@ -40,14 +40,20 @@ from repro.core.task import MatMulTask, Status, tile_tasks
 
 @dataclasses.dataclass
 class Handle:
-    """The ``Status`` interface register, reified."""
+    """The ``Status`` interface register, reified.
+
+    ``done()`` reads the task's Status register — the same word
+    ``checkMatmul`` polls in hardware — so a handle and its task can
+    never disagree about completion (``IDLE -> RUNNING`` at dispatch,
+    ``-> DONE`` when forced).
+    """
 
     task: MatMulTask
     _thunk: Callable[[], jax.Array]
     _result: Optional[jax.Array] = None
 
     def done(self) -> bool:
-        return self._result is not None
+        return self.task.status is Status.DONE
 
     def force(self) -> jax.Array:
         if self._result is None:

@@ -150,14 +150,22 @@ def cute_matmul(a: jax.Array, b: jax.Array, *,
                 epilogue: Epilogue = NO_EPILOGUE,
                 operands: EpilogueOperands = NO_OPERANDS,
                 policy: Optional[PrecisionPolicy] = None,
-                backend: str = "xla",
+                backend: Optional[str] = None,
                 interpret: bool = True) -> jax.Array:
     """C = epilogue(A @ B).  A: (..., M, K), B: (K, N) (or (..., K, N)).
+
+    ``backend`` is a ``cute_matmul`` route string (``"xla"``,
+    ``"pallas"``, ``"auto"``); ``None`` resolves the process-wide default
+    from the ``repro.backend`` registry
+    (``set_default_matmul_backend`` re-routes the whole model zoo).
 
     ``epilogue.transpose`` equivalent: the paper's result-transpose flag is
     expressed by the caller transposing the (cheap, fused) output — XLA
     folds it into the consuming op's layout.
     """
+    if backend is None:
+        from repro.backend import matmul_backend_string   # lazy: no cycle
+        backend = matmul_backend_string()
     if policy is None:
         policy = _infer_policy(a)
     if backend == "auto":
@@ -186,7 +194,7 @@ def _pallas_supported(a, b, epilogue: Epilogue) -> bool:
 
 def linear(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None, *,
            activation: str = "none", glu: bool = False, softcap: float = 0.0,
-           out_dtype=None, backend: str = "xla") -> jax.Array:
+           out_dtype=None, backend: Optional[str] = None) -> jax.Array:
     """Convenience wrapper used by every model layer in this framework."""
     ep = Epilogue(
         bias_type=BiasType.ROW if bias is not None else BiasType.ZERO,

@@ -2,6 +2,12 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi-6b --reduced \\
         --requests 6 --max-new 16
+
+``--plan BACKEND`` prices the queued batch schedule on a modelling
+backend from the ``repro.backend`` registry before serving: the queue is
+lowered through ``workload_to_graph`` and run on e.g. ``desim`` for a
+per-resource timeline — evaluate a batching policy (``--max-batch``)
+without touching hardware.
 """
 
 from __future__ import annotations
@@ -25,6 +31,11 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--plan", default=None, metavar="BACKEND",
+                    help="price the batch schedule on a modelling backend "
+                         "('desim' or 'analytical') before serving")
+    ap.add_argument("--plan-granularity", default="tile",
+                    choices=("tile", "panel", "layer"))
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -41,6 +52,23 @@ def main(argv=None):
         n = 4 + (i * 3) % 12
         key, sub = jax.random.split(key)
         eng.submit(jax.random.randint(sub, (n,), 0, cfg.vocab_size))
+    if args.plan:
+        try:
+            sched, res = eng.evaluate_schedule(
+                args.plan, max_new_tokens=args.max_new,
+                granularity=args.plan_granularity)
+        except (KeyError, ValueError) as e:
+            ap.error(f"--plan: {e}")
+        w = res.detail["workload"]
+        print(f"[plan:{args.plan}] {len(sched.steps)} steps "
+              f"({sum(s.kind == 'prefill' for s in sched.steps)} prefill), "
+              f"graph slice {res.cycles:.0f} cyc "
+              f"(matrix_util={res.utilization:.1%}); full schedule "
+              f"{w['cycles']:.0f} cyc = {w['seconds'] * 1e6:.1f} us")
+        if res.timeline is not None:
+            utils = " ".join(f"{k}={v:.1%}"
+                             for k, v in res.timeline.utilizations().items())
+            print(f"[plan:{args.plan}] per-resource utilization: {utils}")
     t0 = time.perf_counter()
     outs = eng.run(max_new_tokens=args.max_new,
                    temperature=args.temperature)

@@ -238,10 +238,14 @@ def attn_out(cfg: ArchConfig, p, ctx):
 
 
 def _mm_backend(cfg: ArchConfig) -> str:
-    # Pallas matmul everywhere is too slow under interpret mode on CPU for
-    # whole-model tests; per-kernel coverage lives in tests/.  The pallas
-    # backend flag routes *attention* through the flash kernel.
-    return "xla"
+    # The zoo's matmul route is a registry lookup: repro.backend's
+    # set_default_matmul_backend re-routes every projection here.  The
+    # default stays on eager XLA because Pallas matmul everywhere is too
+    # slow under interpret mode on CPU for whole-model tests; per-kernel
+    # coverage lives in tests/.  cfg.backend routes *attention* through
+    # the flash kernel.
+    from repro.backend import matmul_backend_string
+    return matmul_backend_string()
 
 
 # ---------------------------------------------------------------------------

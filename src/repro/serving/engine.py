@@ -2,11 +2,16 @@
 
 The paper's asyncMatMul/checkMatmul contract shows up twice here:
 
-* per step — every projection is a ``cute_matmul`` with fused epilogue;
-* across requests — ``ServingEngine`` dispatches prefill work through
-  ``AsyncMatmulEngine`` handles so a continuous-batching outer loop can
-  overlap host-side scheduling with device compute (dispatch returns
-  immediately; ``checkMatmul``-style forcing happens at collection).
+* per step — every projection is a ``cute_matmul`` with fused epilogue,
+  routed through the ``repro.backend`` registry default
+  (``set_default_matmul_backend`` re-routes serving without touching
+  this module);
+* across *schedules* — ``ServingEngine.plan`` lowers the pending queue
+  into a continuous-batching prefill/decode :class:`BatchSchedule` whose
+  ``LayerTrace`` steps feed ``sim.lower.workload_to_graph``, so a
+  batching policy can be priced on the ``desim`` backend's per-resource
+  timelines (and the identical schedule graph executed bit-exactly by
+  ``backend.get("jax")``) before it ever hits hardware.
 
 ``generate`` is the synchronous core: prefill the prompt batch, then a
 ``lax.scan`` decode loop with greedy/temperature sampling.
@@ -20,6 +25,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import DataType
+from repro.core.simulator import VECTOR_OP_INSTRS, LayerTrace
+from repro.core.task import MatMulTask
 from repro.models.base import ArchConfig, family_module
 
 
@@ -84,23 +92,149 @@ def generate(cfg: ArchConfig, params, batch, *, max_new_tokens: int,
                           steps=max_new_tokens)
 
 
+# ---------------------------------------------------------------------------
+# Batch schedules: the serving queue as a TaskGraph workload.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchStep:
+    """One continuous-batching step: a padded batch through the model."""
+
+    kind: str                    # "prefill" | "decode"
+    requests: "tuple[int, ...]"  # request ids riding this batch
+    tokens: int                  # rows M entering each projection GEMM
+    repeat: int                  # model layers (× decode steps for decode)
+
+
+@dataclasses.dataclass
+class BatchSchedule:
+    """A planned drain of the queue, in the simulator's vocabulary.
+
+    ``layers`` carries one :class:`~repro.core.simulator.LayerTrace` per
+    step (a representative transformer layer's projection GEMMs + vector
+    work; ``repeat`` scales it to full depth), ready for
+    ``sim.lower.workload_to_graph`` / any ``repro.backend`` engine.
+    """
+
+    steps: "list[BatchStep]"
+    layers: "list[LayerTrace]"
+
+    def gemm_tasks(self) -> "dict[str, MatMulTask]":
+        """``{graph GEMM label: task}`` — the labels
+        ``workload_to_graph`` assigns, keyed for ``run_graph`` operands."""
+        return {f"{lt.name}/g{i}": g
+                for lt in self.layers for i, g in enumerate(lt.gemms)}
+
+    def example_operands(self, key, low: int = -8, high: int = 8,
+                         ) -> "dict[str, tuple]":
+        """Random int8 ``(a, b)`` arrays for every GEMM of the schedule —
+        lets an executing backend run the identical schedule graph for
+        real (the parity suite checks jax and desim agree bit-exactly)."""
+        ops = {}
+        for label, t in self.gemm_tasks().items():
+            key, ka, kb = jax.random.split(key, 3)
+            ops[label] = (jax.random.randint(ka, (t.m, t.k), low, high,
+                                             jnp.int8),
+                          jax.random.randint(kb, (t.k, t.n), low, high,
+                                             jnp.int8))
+        return ops
+
+
+def _step_layer(cfg: ArchConfig, name: str, tokens: int,
+                repeat: int) -> LayerTrace:
+    """One serving step as a fused region: the four projection GEMMs of a
+    representative transformer layer (int8, the paper's W8A8 pipeline)
+    plus first-order vector work (norms, dequant, activation, residual)."""
+    d = cfg.d_model
+    mlp_n = cfg.d_ff * (2 if cfg.mlp_glu else 1)
+    gemms = (
+        MatMulTask(m=tokens, n=cfg.q_dim + 2 * cfg.kv_dim, k=d,
+                   data_type=DataType.INT8),
+        MatMulTask(m=tokens, n=d, k=cfg.q_dim, data_type=DataType.INT8),
+        MatMulTask(m=tokens, n=mlp_n, k=d, data_type=DataType.INT8),
+        MatMulTask(m=tokens, n=d, k=cfg.d_ff, data_type=DataType.INT8),
+    )
+    act = (cfg.mlp_activation if cfg.mlp_activation in VECTOR_OP_INSTRS
+           else "eltwise_misc")
+    vector_ops = {
+        "rmsnorm": 2.0 * tokens * d,
+        "dequant": float(sum(t.m * t.n for t in gemms)),
+        act: float(tokens * cfg.d_ff),
+        "residual": 2.0 * tokens * d,
+    }
+    if cfg.mlp_glu:
+        vector_ops["glu_mul"] = float(tokens * cfg.d_ff)
+    return LayerTrace(name, gemms, vector_ops=vector_ops,
+                      intermediate_bytes=4.0 * tokens * mlp_n,
+                      repeat=repeat)
+
+
 class ServingEngine:
     """Continuous-batching façade with async prefill dispatch."""
 
     def __init__(self, cfg: ArchConfig, params, max_batch: int = 8,
                  cache_len: int = 512):
-        from repro.core.engine import AsyncMatmulEngine
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
-        self.async_engine = AsyncMatmulEngine()
         self._queue: list = []
 
     def submit(self, tokens) -> int:
         """Queue a request; returns a request id (asyncMatMul-style)."""
         self._queue.append(jnp.asarray(tokens))
         return len(self._queue) - 1
+
+    # ----- batch schedules -> backends -----------------------------------
+    def plan(self, max_new_tokens: int = 32) -> BatchSchedule:
+        """Plan the continuous-batching drain of the current queue
+        (non-destructive): per padded chunk, one prefill step over
+        ``B × S_padded`` tokens, then ``max_new_tokens`` decode steps of
+        ``B`` tokens (collapsed into one repeated LayerTrace)."""
+        steps: "list[BatchStep]" = []
+        layers: "list[LayerTrace]" = []
+        queue = list(self._queue)
+        first = 0
+        while queue:
+            chunk, queue = queue[: self.max_batch], queue[self.max_batch:]
+            ids = tuple(range(first, first + len(chunk)))
+            first += len(chunk)
+            s = max(int(t.shape[-1]) for t in chunk)
+            ci = len(steps) // 2
+            prefill = BatchStep("prefill", ids, tokens=len(chunk) * s,
+                                repeat=self.cfg.n_layers)
+            decode = BatchStep("decode", ids, tokens=len(chunk),
+                               repeat=self.cfg.n_layers * max_new_tokens)
+            for step in (prefill, decode):
+                steps.append(step)
+                layers.append(_step_layer(
+                    self.cfg, f"b{ci}/{step.kind}", step.tokens,
+                    step.repeat))
+        return BatchSchedule(steps, layers)
+
+    def evaluate_schedule(self, backend_name: str = "desim",
+                          max_new_tokens: int = 32, operands=None,
+                          **backend_kwargs):
+        """Price the planned schedule on a modelling backend.
+
+        Lowers ``plan(max_new_tokens)`` through ``workload_to_graph`` at
+        the backend's granularity/fusion policy and runs the graph —
+        ``desim`` returns the per-resource timeline (and, given
+        ``operands``, the executed numbers).  Returns ``(schedule,
+        ExecResult)``; ``result.detail["workload"]`` carries the
+        repeat-weighted whole-schedule cost dict.
+        """
+        from repro import backend
+        eng = backend.get(backend_name, **backend_kwargs)
+        if not eng.models_time:
+            raise ValueError(
+                f"backend {backend_name!r} executes but does not model "
+                "time; use 'desim' or 'analytical'")
+        sched = self.plan(max_new_tokens)
+        graph = eng.lower(sched.layers)
+        result = eng.run_graph(graph, operands)
+        result.detail["workload"] = eng.run_workload(sched.layers)
+        return sched, result
 
     def run(self, max_new_tokens: int = 32, temperature: float = 0.0):
         """Drain the queue in padded batches; returns list of token arrays."""

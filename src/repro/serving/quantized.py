@@ -54,7 +54,7 @@ class W8A8Linear:
         return cls(w_q=q, w_scale=scale, smooth=smooth, bias=bias)
 
     def __call__(self, x, *, activation: str = "none",
-                 out_dtype=jnp.bfloat16, backend: str = "xla"):
+                 out_dtype=jnp.bfloat16, backend: Optional[str] = None):
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
         if self.smooth is not None:

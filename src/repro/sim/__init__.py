@@ -19,15 +19,15 @@ from repro.sim.graph import (Granularity, Node, TaskGraph,
 from repro.sim.desim import DESimResult, Machine, simulate_graph
 from repro.sim.lower import (desim_gemm, desim_layer, desim_workload,
                              epilogue_vector_ops, execute_graph_jax,
-                             exposed_dispatch, layer_to_graph,
-                             workload_to_graph)
+                             execute_workload_jax, exposed_dispatch,
+                             gemm_labels, layer_to_graph, workload_to_graph)
 from repro.sim.trace import chrome_trace, dump_chrome_trace
 
 __all__ = [
     "Granularity", "Node", "TaskGraph", "build_gemm_graph",
     "DESimResult", "Machine", "simulate_graph",
     "desim_gemm", "desim_layer", "desim_workload", "epilogue_vector_ops",
-    "execute_graph_jax", "exposed_dispatch", "layer_to_graph",
-    "workload_to_graph",
+    "execute_graph_jax", "execute_workload_jax", "exposed_dispatch",
+    "gemm_labels", "layer_to_graph", "workload_to_graph",
     "chrome_trace", "dump_chrome_trace",
 ]

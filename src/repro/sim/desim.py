@@ -38,7 +38,8 @@ from repro.core.precision import policy
 from repro.core.simulator import SATURN_512, VectorUnit
 from repro.core.task import BiasType
 from repro.sim.graph import Node, TaskGraph
-from repro.sim.resources import EventLoop, Resource
+from repro.sim.resources import (EventLoop, Resource, contiguous_run_bytes,
+                                 dram_stride_efficiency)
 
 
 @dataclasses.dataclass
@@ -84,8 +85,15 @@ def build_machine(unit: MatrixUnitConfig, platform: CpuPlatform,
 
 def tile_costs(machine: Machine, node: Node,
                out_bytes: float = 4.0) -> "dict[str, float]":
+    """Per-tile compute/load/writeback cycles.  Load and writeback are
+    charged per operand at the stride-dependent DRAM efficiency its
+    access pattern achieves (``Task`` strides, paper §5.4) — a dense
+    panel streams at the platform's calibrated derate, a narrow tile cut
+    from a wide row-major matrix pays per-row address jumps."""
     task = node.task
     unit = machine.unit
+    base = machine.platform.dram_efficiency
+    raw_bpc = unit.bandwidth / unit.freq_hz
     dt = task.data_type
     eb = policy(dt).bytes_per_elem
     m_eff = -(-task.m // unit.m_pe) * unit.m_pe
@@ -95,9 +103,16 @@ def tile_costs(machine: Machine, node: Node,
     compute = m_eff * n_eff * k_eff / unit.macs_per_cycle(dt)
     bias_bytes = {BiasType.ZERO: 0.0, BiasType.ROW: task.n * 4.0,
                   BiasType.FULL: task.m * task.n * 4.0}[task.bias_type]
-    load = ((task.m + task.n) * task.k * eb + bias_bytes) \
-        / machine.bytes_per_cycle
-    writeback = task.m * task.n * out_bytes / machine.bytes_per_cycle
+    eff_a = dram_stride_efficiency(
+        contiguous_run_bytes(task.m, task.k, task.stride_a, eb), base)
+    eff_b = dram_stride_efficiency(
+        contiguous_run_bytes(task.k, task.n, task.stride_b, eb), base)
+    eff_c = dram_stride_efficiency(
+        contiguous_run_bytes(task.m, task.n, task.stride_c, out_bytes), base)
+    load = (task.m * task.k * eb / (raw_bpc * eff_a)
+            + task.k * task.n * eb / (raw_bpc * eff_b)
+            + bias_bytes / (raw_bpc * base))
+    writeback = task.m * task.n * out_bytes / (raw_bpc * eff_c)
     return {"compute": compute, "load": load, "writeback": writeback}
 
 

@@ -15,7 +15,10 @@ Out (JAX): ``execute_graph_jax`` walks the *same* graph and executes it
 through ``AsyncMatmulEngine``/``cute_matmul`` — matrix nodes dispatch
 accumulator-tile matmuls, vector nodes apply the fused epilogue — which
 is the paper's unified-software-stack claim made literal: one IR, one
-schedule, two targets.
+schedule, two targets.  ``execute_workload_jax`` extends that to
+multi-GEMM schedule graphs (e.g. a serving ``BatchSchedule`` lowered by
+``workload_to_graph``): one ``{gemm label: (a, b)}`` operand dict, one
+output dict, same program order the DES timed.
 """
 
 from __future__ import annotations
@@ -268,6 +271,81 @@ def execute_graph_jax(graph: TaskGraph, a: jax.Array, b: jax.Array, *,
                          t.tile.n0:t.tile.n0 + t.tile.n].set(acc)
         out = out.astype(policy.output_dtype)
     return out
+
+
+def gemm_labels(graph: TaskGraph) -> "list[str]":
+    """Distinct GEMM labels of a graph, in program order.  One label per
+    ``build_gemm_graph`` call — for a ``workload_to_graph`` schedule that
+    is ``f"{layer.name}/g{gemm_index}"``."""
+    seen: "list[str]" = []
+    for n in graph.matmul_nodes():
+        if n.layer not in seen:
+            seen.append(n.layer)
+    return seen
+
+
+def _subgraph_for_gemm(graph: TaskGraph, label: str) -> TaskGraph:
+    """Extract one GEMM from a schedule graph as a standalone single-GEMM
+    graph (nids remapped, cross-layer scheduling deps dropped).
+
+    Epilogue-carrying vector nodes come along when all their matrix deps
+    belong to the GEMM; LAYER-granularity epilogues spanning several
+    GEMMs cannot be executed per-GEMM and are left behind (the caller
+    gets raw accumulator outputs for those GEMMs).
+    """
+    sub = TaskGraph()
+    remap: "dict[int, int]" = {}
+    for node in graph.nodes:
+        if node.kind == "matmul" and node.layer == label:
+            remap[node.nid] = sub.add(
+                "matmul", node.name, layer=node.layer, task=node.task,
+                tile=node.tile).nid
+        elif node.kind == "vector" and node.epilogue is not None:
+            mdeps = [d for d in node.deps
+                     if graph.nodes[d].kind == "matmul"]
+            if mdeps and all(d in remap for d in mdeps):
+                sub.add("vector", node.name,
+                        deps=tuple(remap[d] for d in mdeps),
+                        layer=node.layer, vector_ops=dict(node.vector_ops),
+                        epilogue=node.epilogue)
+    return sub
+
+
+def execute_workload_jax(graph: TaskGraph, operands: "dict[str, object]", *,
+                         engine: Optional[AsyncMatmulEngine] = None,
+                         ) -> "dict[str, jax.Array]":
+    """Execute a multi-GEMM schedule TaskGraph on real arrays.
+
+    ``operands`` maps a GEMM label (see :func:`gemm_labels`) to its
+    arrays: an ``(a, b)`` tuple, an ``(a, b, EpilogueOperands)`` triple,
+    or any object with ``.a``/``.b`` (and optionally ``.epilogue``)
+    attributes such as ``repro.backend.MatMulOperands``.  Each GEMM is
+    executed through :func:`execute_graph_jax` in schedule order; GEMMs
+    without operands are skipped (a schedule may be only partially
+    concrete).  Returns ``{label: output array}``.
+    """
+    engine = engine or AsyncMatmulEngine()
+    labels = gemm_labels(graph)
+    unknown = set(operands) - set(labels)
+    if unknown:
+        raise KeyError(
+            f"operands for unknown GEMM labels {sorted(unknown)[:4]}; "
+            f"graph has {labels[:4]}...")
+    outs: "dict[str, jax.Array]" = {}
+    for label in labels:
+        ops = operands.get(label)
+        if ops is None:
+            continue
+        if isinstance(ops, (tuple, list)):
+            a, b = ops[0], ops[1]
+            eops = ops[2] if len(ops) > 2 else NO_OPERANDS
+        else:
+            a, b = ops.a, ops.b
+            eops = getattr(ops, "epilogue", NO_OPERANDS)
+        outs[label] = execute_graph_jax(
+            _subgraph_for_gemm(graph, label), a, b, operands=eops,
+            engine=engine)
+    return outs
 
 
 # ---------------------------------------------------------------------------

@@ -10,6 +10,15 @@ occupancy is recorded as a ``(start, end, label)`` interval, which is
 what the utilization report and the Chrome-trace exporter consume.  The
 scratchpad's double-buffered banks are just a ``Resource`` with
 ``capacity = scratchpad_banks`` held across a tile's load+compute span.
+
+``dram_stride_efficiency`` / ``contiguous_run_bytes`` model the DRAM
+bandwidth a strided operand stream achieves (paper §5.4): the memory
+loader walks an operand row by row, and each address jump between rows
+costs part of a burst plus a row-activation bubble.  The platform's flat
+``dram_efficiency`` is the DRAMSim-calibrated value for standard dense
+tile panels (64-byte runs); runs at or above that reference stream at
+the calibrated rate, shorter runs — a narrow tile cut from a wide
+row-major matrix, i.e. ``MatMulTask.stride_b ≫ n`` — degrade sharply.
 """
 
 from __future__ import annotations
@@ -17,6 +26,47 @@ from __future__ import annotations
 import heapq
 from collections import deque
 from typing import Callable, Optional
+
+# ---------------------------------------------------------------------------
+# Stride-dependent DRAM efficiency (paper §5.4).
+# ---------------------------------------------------------------------------
+
+#: run length the platform's flat ``dram_efficiency`` is calibrated at —
+#: one DRAM burst, the panel width of a standard dense int8 tile.
+DRAM_REFERENCE_RUN_BYTES = 64.0
+#: bandwidth lost per address jump (burst remainder + activation bubble),
+#: expressed in stream-equivalent bytes.
+DRAM_JUMP_GAP_BYTES = 16.0
+
+
+def contiguous_run_bytes(rows: int, row_elems: int, stride_elems: int,
+                         elem_bytes: float) -> float:
+    """Longest contiguous burst a (rows × row_elems) operand read can
+    sustain given its row stride: dense rows (stride == row length)
+    merge into one run; a strided view jumps every ``row_elems``."""
+    if rows <= 0 or row_elems <= 0:
+        return 0.0
+    if stride_elems <= row_elems:
+        return rows * row_elems * elem_bytes
+    return row_elems * elem_bytes
+
+
+def dram_stride_efficiency(run_bytes: float, base_efficiency: float) -> float:
+    """Achieved/nominal DRAM bandwidth streaming contiguous runs of
+    ``run_bytes`` between address jumps.
+
+    The curve is ``run / (run + gap)`` normalised so the 64-byte
+    reference run reproduces ``base_efficiency`` exactly (runs beyond it
+    saturate there — dense streams are what the flat derate was
+    calibrated on), while sub-burst runs degrade toward
+    ``base * run / (run + gap) / 0.8``.
+    """
+    if run_bytes <= 0:
+        return base_efficiency
+    raw = run_bytes / (run_bytes + DRAM_JUMP_GAP_BYTES)
+    ref = DRAM_REFERENCE_RUN_BYTES / (DRAM_REFERENCE_RUN_BYTES
+                                      + DRAM_JUMP_GAP_BYTES)
+    return base_efficiency * min(1.0, raw / ref)
 
 
 class EventLoop:

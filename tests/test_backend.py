@@ -1,0 +1,274 @@
+"""repro.backend — the unified asyncMatMul contract, cross-engine parity.
+
+The acceptance bar of the API redesign: one ``MatMulTask`` (and one
+serving ``BatchSchedule``) travels the whole stack unchanged, and the
+four registered engines agree — executing backends bit-exactly (int8),
+modelling backends within ~1% on the makespan.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backend
+from repro.core.config import CASE_STUDY
+from repro.core.fusion import Epilogue, cute_matmul
+from repro.core.task import MatMulTask, Status
+from repro.sim.graph import Granularity
+
+
+def int8_pair(key, m, n, k):
+    ka, kb = jax.random.split(key)
+    return (jax.random.randint(ka, (m, k), -8, 8, jnp.int8),
+            jax.random.randint(kb, (k, n), -8, 8, jnp.int8))
+
+
+class TestRegistry:
+    def test_four_backends_registered(self):
+        assert set(backend.available()) >= {"jax", "pallas", "desim",
+                                            "analytical"}
+
+    def test_aliases_resolve(self):
+        assert backend.resolve("analytic") == "analytical"
+        assert backend.resolve("xla") == "jax"
+
+    def test_unknown_backend_rejected(self):
+        with pytest.raises(KeyError):
+            backend.get("verilator")
+
+    def test_constructor_kwargs(self):
+        b = backend.get("desim", granularity="panel", fused=False)
+        assert b.granularity is Granularity.PANEL and not b.fused
+
+    def test_capability_flags(self):
+        assert backend.get("jax").executes
+        assert not backend.get("jax").models_time
+        assert backend.get("analytical").models_time
+        assert not backend.get("analytical").executes
+        d = backend.get("desim")
+        assert d.executes and d.models_time
+
+    def test_zoo_default_route(self):
+        assert backend.matmul_backend_string() in ("xla", "pallas")
+        prev = backend.set_default_matmul_backend("pallas")
+        try:
+            assert backend.matmul_backend_string() == "pallas"
+        finally:
+            backend.set_default_matmul_backend(prev)
+
+    def test_modelling_backends_not_zoo_routable(self):
+        for name in ("desim", "analytical"):
+            with pytest.raises(ValueError):
+                backend.set_default_matmul_backend(name)
+
+
+class TestDispatchContract:
+    """asyncMatMul / checkMatmul semantics, identical across engines."""
+
+    @pytest.mark.parametrize("name", ["jax", "desim", "analytical"])
+    def test_status_register_lifecycle(self, name):
+        task = MatMulTask(m=64, n=64, k=128)
+        eng = backend.get(name)
+        ops = (backend.MatMulOperands(*int8_pair(jax.random.PRNGKey(0),
+                                                 64, 64, 128))
+               if eng.executes and not eng.models_time else None)
+        assert task.status is Status.IDLE
+        h = eng.dispatch(task, ops)
+        assert task.status is Status.RUNNING
+        assert not eng.check(h) and not h.done()
+        r = eng.wait(h)
+        assert task.status is Status.DONE
+        assert eng.check(h) and h.done()
+        assert (r.output is not None) == (name == "jax")
+        assert (r.cycles is not None) == (name != "jax")
+
+    def test_drain_forces_all(self):
+        eng = backend.get("analytical")
+        for _ in range(3):
+            eng.dispatch(MatMulTask(m=64, n=64, k=128))
+        out = eng.drain()
+        assert len(out) == 3 and all(r.cycles > 0 for r in out)
+        assert not eng.dispatched
+
+    def test_executing_backend_requires_operands(self):
+        with pytest.raises(ValueError):
+            backend.get("jax").dispatch(MatMulTask(m=8, n=8, k=8))
+
+    @pytest.mark.parametrize("gran,n_vec", [("tile", 8), ("panel", 2),
+                                            ("layer", 1)])
+    def test_lower_granularity(self, gran, n_vec):
+        eng = backend.get("desim", granularity=gran)
+        ep = Epilogue(activation="relu", out_dtype=jnp.float32)
+        graph = eng.lower(MatMulTask(m=128, n=256, k=64), epilogue=ep)
+        assert len(graph.matmul_nodes()) == 2 * 4
+        assert len(graph.vector_nodes()) == n_vec
+
+
+class TestExecutionParity:
+    """The same task, three executing routes, one answer."""
+
+    def test_int8_bit_exact_jax_desim(self):
+        task = MatMulTask(m=128, n=192, k=256)
+        a, b = int8_pair(jax.random.PRNGKey(1), 128, 192, 256)
+        ops = backend.MatMulOperands(a=a, b=b)
+        outs = {}
+        for name in ("jax", "desim"):
+            outs[name] = np.asarray(
+                backend.get(name).wait(
+                    backend.get(name).dispatch(task, ops)).output)
+        ref = np.asarray(cute_matmul(a, b, backend="xla"))
+        assert (outs["jax"] == ref).all()
+        assert (outs["desim"] == ref).all()
+
+    def test_int8_bit_exact_pallas(self):
+        # lane-aligned shape: the Pallas kernel's divisibility contract.
+        task = MatMulTask(m=128, n=128, k=256)
+        a, b = int8_pair(jax.random.PRNGKey(2), 128, 128, 256)
+        out = backend.get("pallas").wait(
+            backend.get("pallas").dispatch(
+                task, backend.MatMulOperands(a=a, b=b))).output
+        ref = cute_matmul(a, b, backend="xla")
+        assert (np.asarray(out) == np.asarray(ref)).all()
+
+    def test_bf16_tolerance(self):
+        ka, kb = jax.random.split(jax.random.PRNGKey(3))
+        a = jax.random.normal(ka, (128, 256), jnp.bfloat16)
+        b = jax.random.normal(kb, (256, 128), jnp.bfloat16)
+        task = MatMulTask(m=128, n=128, k=256)
+        ops = backend.MatMulOperands(a=a, b=b)
+        ref = np.asarray(cute_matmul(a, b, backend="xla"), np.float32)
+        for name in ("jax", "pallas", "desim"):
+            out = np.asarray(backend.get(name).wait(
+                backend.get(name).dispatch(task, ops)).output, np.float32)
+            np.testing.assert_allclose(out, ref, rtol=2e-2, atol=2e-2)
+
+    def test_run_graph_with_epilogue_matches_direct(self):
+        ep = Epilogue(activation="silu", glu=True, out_dtype=jnp.float32)
+        task = MatMulTask(m=128, n=256, k=128)
+        a, b = int8_pair(jax.random.PRNGKey(4), 128, 256, 128)
+        eng = backend.get("jax", granularity="panel")
+        graph = eng.lower(task, epilogue=ep)
+        out = eng.run_graph(graph, backend.MatMulOperands(a=a, b=b)).output
+        ref = cute_matmul(a, b, epilogue=ep, backend="xla")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestMakespanParity:
+    """analytical asserts the makespan the DES derives — within ~1%."""
+
+    @pytest.mark.parametrize("shape", [(256, 256, 1024), (512, 512, 4096),
+                                       (512, 512, 8192)])
+    def test_gemm_regime(self, shape):
+        m, n, k = shape
+        desim, ana = backend.get("desim"), backend.get("analytical")
+        g = desim.lower(MatMulTask(m=m, n=n, k=k))
+        rd, ra = desim.run_graph(g), ana.run_graph(g)
+        assert rd.cycles > 0
+        assert abs(ra.cycles / rd.cycles - 1.0) < 0.01
+        assert abs(ra.utilization - rd.utilization) < 0.01
+
+    @pytest.mark.parametrize("gran", ["tile", "panel", "layer"])
+    def test_fused_epilogue_regime(self, gran):
+        ep = Epilogue(activation="relu", out_dtype=jnp.float32)
+        desim = backend.get("desim", granularity=gran)
+        ana = backend.get("analytical", granularity=gran)
+        g = desim.lower(MatMulTask(m=256, n=512, k=1024), epilogue=ep)
+        rel = ana.run_graph(g).cycles / desim.run_graph(g).cycles - 1.0
+        assert abs(rel) < 0.015
+
+    def test_dispatch_path_agrees_too(self):
+        task = MatMulTask(m=512, n=512, k=4096)
+        rd = backend.get("desim").wait(backend.get("desim").dispatch(task))
+        ra = backend.get("analytical").wait(
+            backend.get("analytical").dispatch(task))
+        assert abs(ra.cycles / rd.cycles - 1.0) < 0.01
+
+    def test_run_workload_same_shape_dict(self):
+        from repro.core.simulator import LayerTrace
+        layers = [LayerTrace("l", (MatMulTask(m=128, n=256, k=512),),
+                             vector_ops={"silu": 128 * 256.0}, repeat=2)]
+        for name in ("desim", "analytical"):
+            r = backend.get(name).run_workload(layers)
+            assert {"cycles", "matrix", "vector", "seconds",
+                    "flops"} <= set(r)
+        with pytest.raises(NotImplementedError):
+            backend.get("jax").run_workload(layers)
+
+
+class TestServingSchedule:
+    """ROADMAP item: serving batch schedules on DES timelines, and the
+    identical schedule executed bit-exactly by the jax backend."""
+
+    @pytest.fixture(scope="class")
+    def engine(self):
+        from repro.configs.registry import get_config
+        from repro.serving.engine import ServingEngine
+        cfg = get_config("yi-6b", reduced=True)
+        eng = ServingEngine(cfg, params=None, max_batch=2, cache_len=64)
+        key = jax.random.PRNGKey(0)
+        for i in range(5):
+            key, sub = jax.random.split(key)
+            eng.submit(jax.random.randint(sub, (4 + i,), 0, 100))
+        return eng
+
+    def test_plan_shape(self, engine):
+        sched = engine.plan(max_new_tokens=4)
+        kinds = [s.kind for s in sched.steps]
+        assert kinds == ["prefill", "decode"] * 3       # 5 reqs, batch 2
+        assert sched.steps[0].requests == (0, 1)
+        assert sched.steps[-1].requests == (4,)
+        assert len(sched.layers) == len(sched.steps)
+        assert engine._queue and len(engine._queue) == 5   # non-destructive
+
+    def test_desim_timeline(self, engine):
+        sched, res = engine.evaluate_schedule("desim", max_new_tokens=4)
+        assert res.timeline is not None
+        assert set(res.timeline.intervals) == {
+            "dispatcher", "mem_loader", "scratchpad", "pe_array",
+            "vector_unit"}
+        assert res.cycles > 0
+        assert res.detail["workload"]["cycles"] >= res.cycles
+        assert all(0.0 <= u <= 1.0
+                   for u in res.timeline.utilizations().values())
+
+    def test_jax_executes_identical_schedule_bit_exact(self, engine):
+        sched = engine.plan(max_new_tokens=4)
+        ops = sched.example_operands(jax.random.PRNGKey(7))
+        jax_eng, desim = backend.get("jax"), backend.get("desim")
+        graph = jax_eng.lower(sched.layers)
+        rj = jax_eng.run_graph(graph, ops)
+        rd = desim.run_graph(desim.lower(sched.layers), ops)
+        assert set(rj.outputs) == set(ops) == set(rd.outputs)
+        for label, (a, b) in ops.items():
+            ref = np.asarray(cute_matmul(a, b, backend="xla"))
+            assert (np.asarray(rj.outputs[label]) == ref).all(), label
+            assert (np.asarray(rd.outputs[label]) == ref).all(), label
+
+    def test_analytical_agrees_on_schedule(self, engine):
+        sched = engine.plan(max_new_tokens=4)
+        desim, ana = backend.get("desim"), backend.get("analytical")
+        g = desim.lower(sched.layers)
+        rel = ana.run_graph(g).cycles / desim.run_graph(g).cycles - 1.0
+        assert abs(rel) < 0.02
+
+    def test_rejects_executing_backend(self, engine):
+        with pytest.raises(ValueError):
+            engine.evaluate_schedule("jax")
+
+
+class TestBackendBenchmarkHook:
+    def test_benchmarks_engine_lookup(self):
+        """benchmarks/run.py resolves --engine through the registry."""
+        import benchmarks.run as br
+        old = br.ENGINE
+        try:
+            br.ENGINE = "desim"
+            sim = br.workload_sim()
+            from repro.core.simulator import LayerTrace
+            r = sim(CASE_STUDY,
+                    [LayerTrace("l", (MatMulTask(m=128, n=128, k=256),))])
+            assert r["cycles"] > 0
+        finally:
+            br.ENGINE = old

@@ -260,6 +260,68 @@ class TestJaxLowering:
 
 
 # ---------------------------------------------------------------------------
+# Stride-dependent DRAM efficiency (paper §5.4).
+# ---------------------------------------------------------------------------
+
+class TestStrideDramEfficiency:
+    def test_derate_curve_pinned(self):
+        from repro.sim.resources import (DRAM_JUMP_GAP_BYTES,
+                                         DRAM_REFERENCE_RUN_BYTES,
+                                         dram_stride_efficiency)
+        base = 0.92
+        # the reference 64-byte run reproduces the calibrated flat derate
+        assert dram_stride_efficiency(64.0, base) == pytest.approx(base)
+        # longer runs saturate there (dense == the old flat model)
+        for run in (128.0, 4096.0, 1e7):
+            assert dram_stride_efficiency(run, base) == pytest.approx(base)
+        # sub-burst runs follow run/(run+gap) normalised at the reference
+        ref = DRAM_REFERENCE_RUN_BYTES / (DRAM_REFERENCE_RUN_BYTES
+                                          + DRAM_JUMP_GAP_BYTES)
+        for run in (8.0, 16.0, 32.0, 48.0):
+            expect = base * (run / (run + DRAM_JUMP_GAP_BYTES)) / ref
+            assert dram_stride_efficiency(run, base) == pytest.approx(expect)
+        assert dram_stride_efficiency(16.0, base) == pytest.approx(0.575)
+        # monotone non-decreasing in run length
+        effs = [dram_stride_efficiency(r, base)
+                for r in (4, 8, 16, 32, 64, 128, 1024)]
+        assert effs == sorted(effs)
+        # degenerate run falls back to the flat derate
+        assert dram_stride_efficiency(0.0, base) == base
+
+    def test_contiguous_runs_from_task_strides(self):
+        from repro.sim.resources import contiguous_run_bytes
+        # dense rows merge into one run; strided views jump per row
+        assert contiguous_run_bytes(64, 256, 256, 1.0) == 64 * 256
+        assert contiguous_run_bytes(64, 256, 4096, 1.0) == 256
+        assert contiguous_run_bytes(16, 16, 512, 2.0) == 32
+
+    def test_strided_operands_slow_the_des(self):
+        """A narrow column slice of a wide row-major B (stride_b ≫ n)
+        streams sub-burst runs and measurably lengthens the makespan;
+        dense tasks are untouched vs the flat-derate model."""
+        unit = CASE_STUDY.with_(n_scp=16)
+        dense = MatMulTask(m=256, n=16, k=1024)               # stride_b = n
+        strided = MatMulTask(m=256, n=16, k=1024, stride_b=4096)
+        rd = desim_gemm(unit, dense, SHUTTLE)
+        rs = desim_gemm(unit, strided, SHUTTLE)
+        assert rs.cycles > rd.cycles * 1.05
+        # strided A with short K rows pays the same way
+        short_dense = MatMulTask(m=256, n=64, k=32)
+        short_strided = MatMulTask(m=256, n=64, k=32, stride_a=8192)
+        ra_d = desim_gemm(CASE_STUDY, short_dense, SHUTTLE)
+        ra_s = desim_gemm(CASE_STUDY, short_strided, SHUTTLE)
+        assert ra_s.cycles > ra_d.cycles
+
+    def test_tile_tasks_inherit_parent_strides(self):
+        """Tiling a strided view keeps the stride, so the DES sees the
+        paper's §5.4 access pattern at tile granularity."""
+        from repro.core.task import tile_tasks
+        parent = MatMulTask(m=128, n=32, k=64, stride_b=4096)
+        for sub in tile_tasks(parent, 64, 16):
+            assert sub.stride_b == 4096
+
+
+# ---------------------------------------------------------------------------
 # Chrome-trace export.
 # ---------------------------------------------------------------------------
 

@@ -63,6 +63,22 @@ class TestEngine:
         outs = eng.drain()
         assert len(outs) == 3
 
+    def test_handle_reads_status_register(self):
+        """check/done polls the task's Status word, not private handle
+        state — a handle and its task can never disagree."""
+        eng = AsyncMatmulEngine()
+        a = jnp.ones((4, 8), jnp.float32)
+        b = jnp.ones((8, 4), jnp.float32)
+        task = MatMulTask(m=4, n=4, k=8, data_type=DataType.FP32)
+        h = eng.dispatch(task, a, b)
+        assert task.status is Status.RUNNING and not h.done()
+        task.status = Status.DONE            # hardware flips the register
+        assert h.done() and eng.check(h)
+        task.status = Status.RUNNING
+        assert not h.done()
+        eng.wait(h)
+        assert task.status is Status.DONE and h.done()
+
 
 class TestListing1Pipeline:
     def test_matches_reference(self):
