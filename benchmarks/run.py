@@ -15,9 +15,13 @@ ROWS = []
 
 #: Backend-registry name of the modelling engine pricing table6/overlap
 #: ("analytical" = closed-form core.simulator, "desim" = discrete-event
-#: task-graph runtime; aliases like "analytic" accepted).  Set by
-#: --engine.
+#: task-graph runtime, "desim-cluster" = multi-unit contended DES;
+#: aliases like "analytic" accepted).  Set by --engine.
 ENGINE = "analytical"
+
+#: Cluster width for the cluster bench and (when the selected engine
+#: supports it) for the workload pricer.  Set by --units.
+UNITS = 1
 
 
 def workload_sim():
@@ -25,6 +29,10 @@ def workload_sim():
     (same signature as ``core.simulator.simulate_workload``)."""
     from repro import backend
     eng = backend.get(ENGINE)
+    if eng.supports_units:
+        # pin the cluster width to --units (cluster backends default to
+        # units=2 otherwise)
+        eng = backend.get(ENGINE, units=UNITS)
 
     def run(unit, layers, *, fused=True):
         return eng.run_workload(layers, unit=unit, fused=fused)
@@ -286,6 +294,53 @@ def bench_desim():
 
 
 # ---------------------------------------------------------------------------
+# Cluster scaling (repro.sim cluster topology + desim-cluster backend).
+# ---------------------------------------------------------------------------
+
+def bench_cluster():
+    """Weak scaling on the paper GEMM regime (512 rows × 512 × 8192 per
+    unit, int8) across 1..max(UNITS, 4) matrix units sharing the memory
+    loader, plus a fixed-total-bandwidth sweep that exposes where the
+    shared loader saturates."""
+    from repro.core.config import PLATFORM_2TOPS
+    from repro.core.hardware import GIGA, SHUTTLE
+    from repro.core.task import MatMulTask
+    from repro.sim import (ClusterTopology, build_gemm_graph,
+                           partition_graph, simulate_cluster)
+
+    unit = PLATFORM_2TOPS
+    sweep = sorted({1, 2, 4, max(UNITS, 1)})
+
+    def weak(n_units, total_bandwidth=None):
+        g, _ = build_gemm_graph(
+            MatMulTask(m=512 * n_units, n=512, k=8192), unit.m_scp,
+            unit.n_scp)
+        part = partition_graph(g, n_units, "row-panel")
+        topo = ClusterTopology(n_units=n_units, unit=unit,
+                               platform=SHUTTLE,
+                               total_bandwidth=total_bandwidth)
+        return simulate_cluster(part.graph, topo)
+
+    base = None
+    for n in sweep:
+        r, us = timed(lambda n=n: weak(n))
+        base = base if base is not None else r.cycles
+        emit(f"cluster_weak_u{n}", us,
+             f"agg_util={r.aggregate_matrix_utilization:.3f}(goal:>0.85) "
+             f"loader_util={r.loader_utilization:.3f} "
+             f"contention={r.loader_contention():.2f} "
+             f"eff={base / r.cycles:.3f}")
+
+    # Strong bandwidth pressure: the pool stays at one unit's channel.
+    for n in sweep:
+        r, us = timed(lambda n=n: weak(n, total_bandwidth=unit.bandwidth))
+        emit(f"cluster_weak_fixedbw_u{n}", us,
+             f"agg_util={r.aggregate_matrix_utilization:.3f} "
+             f"loader_util={r.loader_utilization:.3f} "
+             f"(shared {unit.bandwidth / GIGA:.0f} GB/s pool)")
+
+
+# ---------------------------------------------------------------------------
 # Table 7 — area/power.
 # ---------------------------------------------------------------------------
 
@@ -364,6 +419,7 @@ BENCHES = {
     "table6": bench_table6_models,
     "overlap": bench_overlap_contribution,
     "desim": bench_desim,
+    "cluster": bench_cluster,
     "table7": bench_table7_area,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
@@ -371,21 +427,34 @@ BENCHES = {
 
 
 def main() -> None:
-    global ENGINE
+    global ENGINE, UNITS
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=tuple(BENCHES), default=None)
     ap.add_argument("--engine", default="analytical",
                     help="repro.backend registry name of the modelling "
                          "engine for table6/overlap (aliases accepted): "
-                         "'analytical' (closed form) or 'desim' (the "
-                         "discrete-event TaskGraph runtime)")
+                         "'analytical' (closed form), 'desim' (the "
+                         "discrete-event TaskGraph runtime) or "
+                         "'desim-cluster' (multi-unit contended DES; "
+                         "combine with --units)")
+    ap.add_argument("--units", type=int, default=1,
+                    help="matrix units for the cluster bench sweep and, "
+                         "when --engine supports it (desim-cluster), for "
+                         "the workload pricer")
     args = ap.parse_args()
     from repro import backend
     try:
         ENGINE = backend.resolve(args.engine)
     except KeyError as e:
         ap.error(str(e))
-    if not backend.get(ENGINE).models_time:
+    if args.units < 1:
+        ap.error(f"--units must be >= 1, got {args.units}")
+    UNITS = args.units
+    probe = backend.get(ENGINE)
+    if UNITS != 1 and not probe.supports_units and args.only != "cluster":
+        ap.error(f"--units {UNITS} needs a cluster-aware --engine "
+                 "('desim-cluster'), or --only cluster")
+    if not probe.models_time:
         ap.error(f"--engine {ENGINE!r} executes numbers but does not "
                  "model time; pick one of "
                  f"{[n for n in backend.available() if backend.get(n).models_time]}")

@@ -1,0 +1,127 @@
+"""Cluster scaling: N matrix units sharing one memory loader.
+
+    PYTHONPATH=src python examples/cluster_scaling.py [--units 8]
+        [--out cluster_trace.json]
+
+Answers the scale-out question the single-unit reproduction cannot:
+what happens when N decoupled matrix units (paper §4) share memory
+bandwidth?  Three experiments on the paper's GEMM regime (int8,
+512 rows/unit × 512 × 8192, the Fig. 6 setup):
+
+1. **Weak scaling, pooled bandwidth** — every unit brings its own
+   memory channel into the shared pool (``ClusterTopology`` default).
+   Aggregate utilization should hold >90%: contention reshuffles
+   transfers but the pool keeps up.
+2. **Weak scaling, fixed bandwidth** — the pool stays at one unit's
+   channel.  The shared loader saturates (utilization -> 1.0) and
+   aggregate matrix utilization collapses ~1/N beyond the knee: the
+   CAMP observation that memory contention, not peak compute, decides
+   delivered throughput.
+3. **Strategy comparison** — the same 4-unit GEMM under row-panel /
+   output-tile / layer-pipeline partitioning, via the registered
+   ``desim-cluster`` backend, plus the ``sharded`` backend executing
+   the identical partitioned graph bit-exactly against ``jax``.
+
+The widest sweep entry's trace is exported as Chrome-trace JSON: open
+it in https://ui.perfetto.dev — one process per unit, the shared
+loader's overlapping transfers on pid 0 are the contention, visible.
+"""
+
+import argparse
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import backend
+from repro.core.config import PLATFORM_2TOPS
+from repro.core.hardware import GIGA, SHUTTLE
+from repro.core.task import MatMulTask
+from repro.sim import (ClusterTopology, build_gemm_graph, dump_chrome_trace,
+                       partition_graph, simulate_cluster)
+
+
+def weak_gemm(n_units):
+    """One paper-regime GEMM per unit (rows scale with the cluster)."""
+    return MatMulTask(m=512 * n_units, n=512, k=8192)
+
+
+def run(n_units, total_bandwidth=None, strategy="row-panel"):
+    unit = PLATFORM_2TOPS
+    g, _ = build_gemm_graph(weak_gemm(n_units), unit.m_scp, unit.n_scp)
+    part = partition_graph(g, n_units, strategy)
+    topo = ClusterTopology(n_units=n_units, unit=unit, platform=SHUTTLE,
+                           total_bandwidth=total_bandwidth)
+    return part, simulate_cluster(part.graph, topo)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--units", type=int, default=8,
+                    help="largest cluster in the sweep")
+    ap.add_argument("--out", default="cluster_trace.json",
+                    help="Chrome-trace output for the widest sweep run")
+    args = ap.parse_args()
+    sweep = [n for n in (1, 2, 4, 8, 16) if n <= max(args.units, 1)]
+
+    # 1. weak scaling, pooled bandwidth -----------------------------------
+    print("weak scaling, pooled loader bandwidth (n x 48 GB/s):")
+    print(f"{'units':>6}{'cycles':>12}{'agg_util':>10}{'loader':>8}"
+          f"{'contention':>12}{'xfers':>7}")
+    base = None
+    for n in sweep:
+        part, r = run(n)
+        base = base or r.cycles
+        print(f"{n:>6}{r.cycles:>12.0f}"
+              f"{r.aggregate_matrix_utilization:>10.3f}"
+              f"{r.loader_utilization:>8.2f}"
+              f"{r.loader_contention():>12.2f}{part.n_transfers:>7}")
+
+    # 2. weak scaling, fixed pool: where the shared loader saturates ------
+    bw = PLATFORM_2TOPS.bandwidth
+    print(f"\nweak scaling, fixed {bw / GIGA:.0f} GB/s pool "
+          "(the saturation curve):")
+    print(f"{'units':>6}{'cycles':>12}{'agg_util':>10}{'loader':>8}"
+          f"{'scaling_eff':>12}")
+    for n in sweep:
+        _, r = run(n, total_bandwidth=bw)
+        print(f"{n:>6}{r.cycles:>12.0f}"
+              f"{r.aggregate_matrix_utilization:>10.3f}"
+              f"{r.loader_utilization:>8.2f}{base / r.cycles:>12.3f}")
+
+    # 3. strategies through the registered backends -----------------------
+    print("\n4-unit strategies (desim-cluster backend) + sharded parity:")
+    task = MatMulTask(m=512, n=512, k=2048)
+    ka, kb = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.randint(ka, (task.m, task.k), -8, 8, jnp.int8)
+    b = jax.random.randint(kb, (task.k, task.n), -8, 8, jnp.int8)
+    ref = np.asarray(backend.get("jax").wait(backend.get("jax").dispatch(
+        task, backend.MatMulOperands(a=a, b=b))).output)
+    for strategy in ("row-panel", "output-tile", "layer-pipeline"):
+        eng = backend.get("desim-cluster", units=4, strategy=strategy)
+        r = eng.wait(eng.dispatch(task))
+        sh = backend.get("sharded", units=4, strategy=strategy)
+        out = np.asarray(sh.wait(sh.dispatch(
+            task, backend.MatMulOperands(a=a, b=b))).output)
+        exact = bool((out == ref).all())
+        print(f"  {strategy:<16} cycles={r.cycles:>9.0f} "
+              f"agg_util={r.utilization:.3f} "
+              f"xfers={r.detail['partition']['transfers']:>3} "
+              f"sharded==jax: {exact}")
+
+    # 4. trace export ------------------------------------------------------
+    widest = max(sweep)
+    _, rw = run(widest)
+    path = dump_chrome_trace(rw, args.out,
+                             process_name=f"cutev2-cluster x{widest}")
+    print(f"\nwrote {widest}-unit trace to {path} - open in "
+          "https://ui.perfetto.dev (one process per unit; the "
+          "overlapping mem_loader events are the shared-bandwidth "
+          "contention)")
+
+
+if __name__ == "__main__":
+    main()

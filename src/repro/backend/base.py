@@ -116,15 +116,24 @@ class Backend(abc.ABC):
     executes: bool = False
     #: produces cycle estimates / timelines
     models_time: bool = False
+    #: understands ``units > 1`` (cluster backends); single-unit engines
+    #: reject it rather than silently mispricing a multi-unit deployment.
+    supports_units: bool = False
 
     def __init__(self, unit: MatrixUnitConfig = CASE_STUDY,
                  platform: CpuPlatform = SHUTTLE,
                  vector: VectorUnit = SATURN_512,
-                 granularity=None, fused: bool = True):
+                 granularity=None, fused: bool = True, units: int = 1):
         from repro.sim.graph import Granularity
+        if units != 1 and not self.supports_units:
+            raise ValueError(
+                f"backend {self.name!r} models a single matrix unit; for "
+                f"units={units} use 'desim-cluster' (timelines) or "
+                "'sharded' (execution)")
         self.unit = unit
         self.platform = platform
         self.vector = vector
+        self.units = units
         self.granularity = Granularity(granularity or Granularity.TILE)
         self.fused = fused
         self.dispatched: "list[DispatchHandle]" = []

@@ -1,0 +1,122 @@
+"""The cluster discrete-event backend: N matrix units, one shared loader.
+
+``desim-cluster`` is ``desim`` scaled out: ``lower()`` tiles work as
+usual, ``sim.partition`` shards the tiles across ``units`` (row-panel /
+output-tile / layer-pipeline, with explicit inter-unit transfer nodes),
+and ``sim.desim.simulate_cluster`` runs the partitioned graph on a
+:class:`~repro.sim.resources.ClusterTopology` — per-unit dispatcher,
+scratchpad banks, PE array and vector unit, all contending for one
+shared memory loader under a fair-share or FCFS bandwidth-partitioning
+policy.  Given concrete operands, the *same* partitioned graph also
+executes through the JAX lowering, so numbers come back alongside the
+contended timelines (the paper's unified-stack claim, cluster-sized).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.backend.base import (Backend, ExecResult, GraphOperands,
+                                MatMulOperands)
+from repro.backend.registry import register
+from repro.core.fusion import Epilogue, NO_EPILOGUE
+from repro.core.task import MatMulTask
+from repro.sim.resources import ClusterTopology
+
+
+class PartitionedBackend(Backend):
+    """Shared plumbing for the cluster backends: a ``units``-wide
+    partition strategy and TaskGraph sharding via ``sim.partition``."""
+
+    supports_units = True
+
+    def __init__(self, units: int = 2, strategy: str = "row-panel", **kw):
+        from repro.sim.partition import STRATEGIES
+        if strategy not in STRATEGIES:
+            raise ValueError(f"unknown partition strategy {strategy!r}; "
+                             f"one of {STRATEGIES}")
+        super().__init__(units=units, **kw)
+        self.strategy = strategy
+
+    def partition(self, graph):
+        """Shard an (unpartitioned) TaskGraph for this backend's cluster;
+        pre-partitioned input (``sim.partition.Partition``) passes
+        through."""
+        from repro.sim.partition import Partition, partition_graph
+        if isinstance(graph, Partition):
+            if graph.n_units != self.units:
+                raise ValueError(
+                    f"graph partitioned for {graph.n_units} unit(s) but "
+                    f"backend has units={self.units}")
+            return graph
+        return partition_graph(graph, self.units, self.strategy)
+
+
+@register("desim-cluster")
+class ClusterDESimBackend(PartitionedBackend):
+    """Multi-unit machine model + optional lockstep JAX execution."""
+
+    executes = True
+    models_time = True
+    matmul_string = "xla"           # numeric half runs through XLA
+
+    def __init__(self, units: int = 2, strategy: str = "row-panel",
+                 loader_policy: str = "fair",
+                 total_bandwidth: Optional[float] = None,
+                 k_stream: bool = True, **kw):
+        super().__init__(units=units, strategy=strategy, **kw)
+        self.loader_policy = loader_policy
+        self.total_bandwidth = total_bandwidth
+        self.k_stream = k_stream
+
+    def topology(self, unit=None, platform=None,
+                 vector=None) -> ClusterTopology:
+        return ClusterTopology(
+            n_units=self.units, unit=unit or self.unit,
+            platform=platform or self.platform,
+            vector=vector or self.vector,
+            loader_policy=self.loader_policy,
+            total_bandwidth=self.total_bandwidth,
+            k_stream=self.k_stream)
+
+    def _stage(self, task: MatMulTask, operands: MatMulOperands,
+               epilogue: Epilogue) -> Callable[[], ExecResult]:
+        ep = None if epilogue is NO_EPILOGUE else epilogue
+        part = self.partition(self.lower(task, epilogue=ep))
+        return lambda: self.run_graph(
+            part, operands if operands.concrete else None)
+
+    def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
+        from repro.sim.desim import simulate_cluster
+        from repro.sim.lower import execute_graph_jax, execute_workload_jax
+        part = self.partition(graph)
+        r = simulate_cluster(part.graph, self.topology())
+        output, outputs = None, None
+        if isinstance(operands, dict):
+            outputs = execute_workload_jax(part.graph, operands)
+        elif operands is not None and operands.concrete:
+            output = execute_graph_jax(part.graph, operands.a, operands.b,
+                                       operands=operands.epilogue)
+        return ExecResult(
+            output=output, outputs=outputs, cycles=r.cycles,
+            seconds=r.seconds(),
+            utilization=r.aggregate_matrix_utilization, timeline=r,
+            detail={
+                "utilizations": r.utilizations(),
+                "unit_utilizations": r.unit_utilizations(),
+                "loader_utilization": r.loader_utilization,
+                "loader_contention": r.loader_contention(),
+                "partition": {"strategy": part.strategy,
+                              "n_units": part.n_units,
+                              "transfers": part.n_transfers,
+                              "transfer_bytes": part.transfer_bytes},
+            })
+
+    def run_workload(self, layers, *, fused=None, unit=None, platform=None,
+                     vector=None):
+        from repro.sim.lower import cluster_workload
+        return cluster_workload(
+            self.topology(unit, platform, vector), layers,
+            strategy=self.strategy,
+            fused=self.fused if fused is None else fused,
+            granularity=self.granularity)

@@ -44,7 +44,7 @@ class _EagerBackend(Backend):
 
     def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
         from repro.sim.lower import execute_graph_jax, execute_workload_jax
-        engine = AsyncMatmulEngine(unit=self.unit, backend=self.matmul_string)
+        engine = self._engine
         if isinstance(operands, dict):
             outs = execute_workload_jax(graph, operands, engine=engine)
             return ExecResult(outputs=outs)

@@ -18,8 +18,22 @@ _REGISTRY: "dict[str, Type[Backend]]" = {}
 ALIASES = {"analytic": "analytical", "xla": "jax"}
 
 
-def register(name: str) -> Callable[[Type[Backend]], Type[Backend]]:
+def register(name: str, *,
+             override: bool = False) -> Callable[[Type[Backend]], Type[Backend]]:
+    """Register a Backend class under ``name``.
+
+    Re-registering the *same* class is idempotent (module re-import
+    safety); registering a different class under a taken name raises
+    unless ``override=True`` — silent replacement has bitten every
+    plugin registry ever.
+    """
     def deco(cls: Type[Backend]) -> Type[Backend]:
+        existing = _REGISTRY.get(name)
+        if existing is not None and existing is not cls and not override:
+            raise ValueError(
+                f"backend name {name!r} already registered to "
+                f"{existing.__name__}; pass register({name!r}, "
+                f"override=True) to replace it")
         cls.name = name
         _REGISTRY[name] = cls
         return cls
@@ -30,7 +44,8 @@ def resolve(name: str) -> str:
     canon = ALIASES.get(name, name)
     if canon not in _REGISTRY:
         raise KeyError(
-            f"unknown backend {name!r}; registered: {available()}")
+            f"unknown backend {name!r}; registered: {available()} "
+            f"(aliases: {dict(ALIASES)})")
     return canon
 
 

@@ -33,9 +33,19 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--plan", default=None, metavar="BACKEND",
                     help="price the batch schedule on a modelling backend "
-                         "('desim' or 'analytical') before serving")
+                         "('desim', 'analytical' or 'desim-cluster') "
+                         "before serving")
     ap.add_argument("--plan-granularity", default="tile",
                     choices=("tile", "panel", "layer"))
+    ap.add_argument("--plan-units", type=int, default=1,
+                    help="cluster width for --plan: shard every schedule "
+                         "step across N matrix units sharing the memory "
+                         "loader (use with --plan desim-cluster)")
+    ap.add_argument("--plan-strategy", default=None,
+                    choices=("row-panel", "output-tile", "layer-pipeline"),
+                    help="partition strategy for --plan desim-cluster "
+                         "(serving GEMMs are wide and short: "
+                         "'output-tile' shards their large N dimension)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -53,16 +63,21 @@ def main(argv=None):
         key, sub = jax.random.split(key)
         eng.submit(jax.random.randint(sub, (n,), 0, cfg.vocab_size))
     if args.plan:
+        plan_kw = {}
+        if args.plan_strategy is not None:
+            plan_kw["strategy"] = args.plan_strategy
         try:
             sched, res = eng.evaluate_schedule(
                 args.plan, max_new_tokens=args.max_new,
-                granularity=args.plan_granularity)
-        except (KeyError, ValueError) as e:
+                units=args.plan_units,
+                granularity=args.plan_granularity, **plan_kw)
+        except (KeyError, TypeError, ValueError) as e:
             ap.error(f"--plan: {e}")
         w = res.detail["workload"]
         print(f"[plan:{args.plan}] {len(sched.steps)} steps "
-              f"({sum(s.kind == 'prefill' for s in sched.steps)} prefill), "
-              f"graph slice {res.cycles:.0f} cyc "
+              f"({sum(s.kind == 'prefill' for s in sched.steps)} prefill"
+              + (f", {sched.units} units" if sched.units > 1 else "")
+              + f"), graph slice {res.cycles:.0f} cyc "
               f"(matrix_util={res.utilization:.1%}); full schedule "
               f"{w['cycles']:.0f} cyc = {w['seconds'] * 1e6:.1f} us")
         if res.timeline is not None:

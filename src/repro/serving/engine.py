@@ -114,10 +114,16 @@ class BatchSchedule:
     step (a representative transformer layer's projection GEMMs + vector
     work; ``repeat`` scales it to full depth), ready for
     ``sim.lower.workload_to_graph`` / any ``repro.backend`` engine.
+
+    ``units`` records the cluster width the schedule is planned against:
+    a cluster backend (``desim-cluster`` / ``sharded``) shards every
+    step's GEMMs across that many matrix units, so the same schedule is
+    priced on contended multi-unit timelines.
     """
 
     steps: "list[BatchStep]"
     layers: "list[LayerTrace]"
+    units: int = 1
 
     def gemm_tasks(self) -> "dict[str, MatMulTask]":
         """``{graph GEMM label: task}`` — the labels
@@ -186,11 +192,15 @@ class ServingEngine:
         return len(self._queue) - 1
 
     # ----- batch schedules -> backends -----------------------------------
-    def plan(self, max_new_tokens: int = 32) -> BatchSchedule:
+    def plan(self, max_new_tokens: int = 32, units: int = 1) -> BatchSchedule:
         """Plan the continuous-batching drain of the current queue
         (non-destructive): per padded chunk, one prefill step over
         ``B × S_padded`` tokens, then ``max_new_tokens`` decode steps of
-        ``B`` tokens (collapsed into one repeated LayerTrace)."""
+        ``B`` tokens (collapsed into one repeated LayerTrace).
+
+        ``units`` is the cluster width the schedule targets — recorded on
+        the schedule and consumed by ``evaluate_schedule`` so a cluster
+        backend prices the drain on ``units`` contended matrix units."""
         steps: "list[BatchStep]" = []
         layers: "list[LayerTrace]" = []
         queue = list(self._queue)
@@ -210,27 +220,31 @@ class ServingEngine:
                 layers.append(_step_layer(
                     self.cfg, f"b{ci}/{step.kind}", step.tokens,
                     step.repeat))
-        return BatchSchedule(steps, layers)
+        return BatchSchedule(steps, layers, units=units)
 
     def evaluate_schedule(self, backend_name: str = "desim",
                           max_new_tokens: int = 32, operands=None,
-                          **backend_kwargs):
+                          units: Optional[int] = None, **backend_kwargs):
         """Price the planned schedule on a modelling backend.
 
-        Lowers ``plan(max_new_tokens)`` through ``workload_to_graph`` at
-        the backend's granularity/fusion policy and runs the graph —
-        ``desim`` returns the per-resource timeline (and, given
-        ``operands``, the executed numbers).  Returns ``(schedule,
-        ExecResult)``; ``result.detail["workload"]`` carries the
-        repeat-weighted whole-schedule cost dict.
+        Lowers ``plan(max_new_tokens, units)`` through
+        ``workload_to_graph`` at the backend's granularity/fusion policy
+        and runs the graph — ``desim`` returns the per-resource timeline
+        (and, given ``operands``, the executed numbers);
+        ``desim-cluster`` with ``units=N`` prices the same schedule on N
+        matrix units contending for the shared loader.  Returns
+        ``(schedule, ExecResult)``; ``result.detail["workload"]``
+        carries the repeat-weighted whole-schedule cost dict.
         """
         from repro import backend
+        units = 1 if units is None else units
+        backend_kwargs["units"] = units
         eng = backend.get(backend_name, **backend_kwargs)
         if not eng.models_time:
             raise ValueError(
                 f"backend {backend_name!r} executes but does not model "
                 "time; use 'desim' or 'analytical'")
-        sched = self.plan(max_new_tokens)
+        sched = self.plan(max_new_tokens, units=units)
         graph = eng.lower(sched.layers)
         result = eng.run_graph(graph, operands)
         result.detail["workload"] = eng.run_workload(sched.layers)

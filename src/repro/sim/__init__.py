@@ -16,18 +16,27 @@ One ``TaskGraph`` IR (``sim.graph``) drives two consumers:
 
 from repro.sim.graph import (Granularity, Node, TaskGraph,
                              build_gemm_graph)
-from repro.sim.desim import DESimResult, Machine, simulate_graph
-from repro.sim.lower import (desim_gemm, desim_layer, desim_workload,
-                             epilogue_vector_ops, execute_graph_jax,
-                             execute_workload_jax, exposed_dispatch,
-                             gemm_labels, layer_to_graph, workload_to_graph)
+from repro.sim.resources import BandwidthResource, ClusterTopology
+from repro.sim.desim import (ClusterDESimResult, DESimResult, Machine,
+                             build_cluster, simulate_cluster,
+                             simulate_graph)
+from repro.sim.partition import (Partition, STRATEGIES, partition_graph)
+from repro.sim.lower import (cluster_workload, desim_gemm, desim_layer,
+                             desim_workload, epilogue_vector_ops,
+                             execute_graph_jax, execute_workload_jax,
+                             exposed_dispatch, gemm_labels, layer_to_graph,
+                             workload_to_graph)
 from repro.sim.trace import chrome_trace, dump_chrome_trace
 
 __all__ = [
     "Granularity", "Node", "TaskGraph", "build_gemm_graph",
-    "DESimResult", "Machine", "simulate_graph",
-    "desim_gemm", "desim_layer", "desim_workload", "epilogue_vector_ops",
-    "execute_graph_jax", "execute_workload_jax", "exposed_dispatch",
-    "gemm_labels", "layer_to_graph", "workload_to_graph",
+    "BandwidthResource", "ClusterTopology",
+    "ClusterDESimResult", "DESimResult", "Machine", "build_cluster",
+    "simulate_cluster", "simulate_graph",
+    "Partition", "STRATEGIES", "partition_graph",
+    "cluster_workload", "desim_gemm", "desim_layer", "desim_workload",
+    "epilogue_vector_ops", "execute_graph_jax", "execute_workload_jax",
+    "exposed_dispatch", "gemm_labels", "layer_to_graph",
+    "workload_to_graph",
     "chrome_trace", "dump_chrome_trace",
 ]

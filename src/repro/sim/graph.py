@@ -61,6 +61,7 @@ class Node:
     name: str
     deps: "tuple[int, ...]" = ()
     layer: str = ""                   # grouping label for traces
+    unit: int = 0                     # matrix unit this node runs on
     # matmul payload
     task: Optional[MatMulTask] = None
     tile: Optional[TileCoord] = None

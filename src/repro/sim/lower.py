@@ -195,6 +195,59 @@ def _slice_operands(ops: EpilogueOperands, ep: Epilogue,
         else ops.residual[m0:m0 + m, n0:n0 + n])
 
 
+def matmul_dep_tiles(graph: TaskGraph, node: Node) -> "list[Node]":
+    """Matmul producers of ``node``, looking *through* memory nodes —
+    a partitioned graph routes cross-unit edges via transfer nodes, but
+    the data dependency is still on the producing tiles."""
+    out: "list[Node]" = []
+    seen: "set[int]" = set()
+    stack = list(node.deps)
+    while stack:
+        d = stack.pop()
+        if d in seen:
+            continue
+        seen.add(d)
+        dn = graph.nodes[d]
+        if dn.kind == "matmul":
+            out.append(dn)
+        elif dn.kind == "memory":
+            stack.extend(dn.deps)
+    return sorted(out, key=lambda n: n.nid)
+
+
+def _epilogue_regions(graph: TaskGraph, policy, n_total: int):
+    """Yield ``(ep, dep_tiles, (m_lo, m_hi, n_lo, n_hi))`` for each
+    epilogue-carrying vector node, in program order, with the output
+    dtype resolved and the GLU full-N guard applied — the one region
+    walk both execution routes share."""
+    for node in graph.topo_order():
+        if node.kind != "vector" or node.epilogue is None:
+            continue                          # cost-only node (sim graphs)
+        ep = node.epilogue
+        if ep.out_dtype is None:
+            ep = dataclasses.replace(ep, out_dtype=policy.output_dtype)
+        dep_tiles = matmul_dep_tiles(graph, node)
+        m_lo = min(t.tile.m0 for t in dep_tiles)
+        m_hi = max(t.tile.m0 + t.tile.m for t in dep_tiles)
+        n_lo = min(t.tile.n0 for t in dep_tiles)
+        n_hi = max(t.tile.n0 + t.tile.n for t in dep_tiles)
+        if ep.glu and (n_lo != 0 or n_hi != n_total):
+            raise ValueError("GLU epilogues need a full-N region; use "
+                             "PANEL or LAYER granularity")
+        yield ep, dep_tiles, (m_lo, m_hi, n_lo, n_hi)
+
+
+def _place_region(out, part, ep, m_total: int, n_total: int,
+                  m_lo: int, m_hi: int, n_lo: int):
+    """Write one finished epilogue region into the (lazily created)
+    output; GLU halves the column space."""
+    if out is None:
+        n_out = n_total // 2 if ep.glu else n_total
+        out = jnp.zeros((m_total, n_out), part.dtype)
+    col = n_lo // 2 if ep.glu else n_lo
+    return out.at[m_lo:m_hi, col:col + part.shape[-1]].set(part)
+
+
 def execute_graph_jax(graph: TaskGraph, a: jax.Array, b: jax.Array, *,
                       operands: EpilogueOperands = NO_OPERANDS,
                       engine: Optional[AsyncMatmulEngine] = None) -> jax.Array:
@@ -221,47 +274,26 @@ def execute_graph_jax(graph: TaskGraph, a: jax.Array, b: jax.Array, *,
     n_total = max(t.tile.n0 + t.tile.n for t in tiles)
 
     acc_ep = Epilogue(out_dtype=policy.accum_dtype)   # exact accumulators
-    handles: "dict[int, object]" = {}
-    acc_parts: "dict[int, jax.Array]" = {}
+    handles = {
+        node.nid: engine.dispatch(            # asyncMatMul, program order
+            node.task, a[node.tile.m0:node.tile.m0 + node.tile.m, :],
+            b[:, node.tile.n0:node.tile.n0 + node.tile.n], epilogue=acc_ep)
+        for node in graph.topo_order() if node.kind == "matmul"}
+    # (memory nodes are simulation-only: nothing to execute.)
     out = None
-    for node in graph.topo_order():
-        if node.kind == "matmul":
-            c = node.tile
-            a_t = a[c.m0:c.m0 + c.m, :]
-            b_t = b[:, c.n0:c.n0 + c.n]
-            handles[node.nid] = engine.dispatch(node.task, a_t, b_t,
-                                                epilogue=acc_ep)
-        elif node.kind == "vector":
-            ep = node.epilogue
-            if ep is None:
-                continue                      # cost-only node (sim graphs)
-            if ep.out_dtype is None:
-                ep = dataclasses.replace(ep, out_dtype=policy.output_dtype)
-            dep_tiles = [graph.nodes[d] for d in node.deps
-                         if graph.nodes[d].kind == "matmul"]
-            m_lo = min(t.tile.m0 for t in dep_tiles)
-            m_hi = max(t.tile.m0 + t.tile.m for t in dep_tiles)
-            n_lo = min(t.tile.n0 for t in dep_tiles)
-            n_hi = max(t.tile.n0 + t.tile.n for t in dep_tiles)
-            if ep.glu and (n_lo != 0 or n_hi != n_total):
-                raise ValueError("GLU epilogues need a full-N region; use "
-                                 "PANEL or LAYER granularity")
-            region = jnp.zeros((m_hi - m_lo, n_hi - n_lo), policy.accum_dtype)
-            for t in dep_tiles:
-                acc = engine.wait(handles[t.nid])     # checkMatmul
-                region = region.at[
-                    t.tile.m0 - m_lo:t.tile.m0 - m_lo + t.tile.m,
-                    t.tile.n0 - n_lo:t.tile.n0 - n_lo + t.tile.n].set(acc)
-            part = apply_epilogue(
-                region, ep, _slice_operands(operands, ep, m_lo,
-                                            m_hi - m_lo, n_lo, n_hi - n_lo))
-            if out is None:
-                n_out = n_total // 2 if ep.glu else n_total
-                out = jnp.zeros((m_total, n_out), part.dtype)
-            out = out.at[m_lo:m_hi, (n_lo // 2 if ep.glu else n_lo):
-                         (n_lo // 2 if ep.glu else n_lo) + part.shape[-1]
-                         ].set(part)
-        # memory nodes are simulation-only: nothing to execute.
+    for ep, dep_tiles, (m_lo, m_hi, n_lo, n_hi) in \
+            _epilogue_regions(graph, policy, n_total):
+        region = jnp.zeros((m_hi - m_lo, n_hi - n_lo), policy.accum_dtype)
+        for t in dep_tiles:
+            acc = engine.wait(handles[t.nid])         # checkMatmul
+            region = region.at[
+                t.tile.m0 - m_lo:t.tile.m0 - m_lo + t.tile.m,
+                t.tile.n0 - n_lo:t.tile.n0 - n_lo + t.tile.n].set(acc)
+        part = apply_epilogue(
+            region, ep, _slice_operands(operands, ep, m_lo, m_hi - m_lo,
+                                        n_lo, n_hi - n_lo))
+        out = _place_region(out, part, ep, m_total, n_total, m_lo, m_hi,
+                            n_lo)
 
     if out is None:                           # no epilogue nodes: raw acc
         out = jnp.zeros((m_total, n_total), policy.accum_dtype)
@@ -271,6 +303,78 @@ def execute_graph_jax(graph: TaskGraph, a: jax.Array, b: jax.Array, *,
                          t.tile.n0:t.tile.n0 + t.tile.n].set(acc)
         out = out.astype(policy.output_dtype)
     return out
+
+
+def apply_graph_epilogues(graph: TaskGraph, acc: jax.Array, *,
+                          operands: EpilogueOperands = NO_OPERANDS,
+                          in_dtype=None) -> jax.Array:
+    """Finish a single-GEMM graph from a *precomputed* full accumulator.
+
+    The cluster execution path (``backend.get("sharded")``) computes the
+    accumulator with one ``shard_map`` over the partition instead of
+    per-tile dispatches; this walks the same vector nodes
+    ``execute_graph_jax`` would and applies their epilogues to the same
+    regions, so both routes produce identical outputs.
+    """
+    policy = _infer_policy(jnp.zeros((), in_dtype)) if in_dtype is not None \
+        else _infer_policy(acc)
+    tiles = graph.matmul_nodes()
+    if not tiles:
+        raise ValueError("graph has no matmul nodes")
+    m_total = max(t.tile.m0 + t.tile.m for t in tiles)
+    n_total = max(t.tile.n0 + t.tile.n for t in tiles)
+    out = None
+    for ep, _, (m_lo, m_hi, n_lo, n_hi) in \
+            _epilogue_regions(graph, policy, n_total):
+        region = acc[m_lo:m_hi, n_lo:n_hi].astype(policy.accum_dtype)
+        part = apply_epilogue(
+            region, ep, _slice_operands(operands, ep, m_lo, m_hi - m_lo,
+                                        n_lo, n_hi - n_lo))
+        out = _place_region(out, part, ep, m_total, n_total, m_lo, m_hi,
+                            n_lo)
+    if out is None:                           # no epilogue nodes: raw acc
+        out = acc.astype(policy.output_dtype)
+    return out
+
+
+def cluster_workload(topology, layers: "list[LayerTrace]", *,
+                     strategy: str = "row-panel",
+                     fused: bool = True,
+                     granularity: Granularity = Granularity.TILE,
+                     ) -> "dict[str, float]":
+    """``desim_workload`` on a cluster: per layer, partition the graph
+    across the topology's units and simulate on the contended machine.
+    Same dict shape as ``simulate_workload`` plus cluster diagnostics."""
+    from repro.sim.desim import simulate_cluster, unit_prefix
+    from repro.sim.partition import partition_graph
+    tot = {"cycles": 0.0, "matrix": 0.0, "vector": 0.0}
+    ideal = 0.0
+    loader_busy = 0.0
+    transfers = 0
+    for layer in layers:
+        graph, _ = layer_to_graph(topology.unit, layer, fused=fused,
+                                  granularity=granularity,
+                                  platform=topology.platform)
+        part = partition_graph(graph, topology.n_units, strategy)
+        r = simulate_cluster(part.graph, topology)
+        pe = sum(r.busy(unit_prefix(i, r.n_units) + "pe_array")
+                 for i in range(r.n_units))
+        vec = sum(r.busy(unit_prefix(i, r.n_units) + "vector_unit")
+                  for i in range(r.n_units))
+        tot["cycles"] += r.cycles * layer.repeat
+        tot["matrix"] += pe * layer.repeat
+        tot["vector"] += vec * layer.repeat
+        ideal += r.ideal_matrix_cycles * layer.repeat
+        loader_busy += r.loader_busy * layer.repeat
+        transfers += part.n_transfers
+    tot["seconds"] = tot["cycles"] / topology.unit.freq_hz
+    tot["flops"] = sum(l.flops() for l in layers)
+    tot["matrix_utilization"] = (
+        ideal / (tot["cycles"] * topology.n_units) if tot["cycles"] else 0.0)
+    tot["loader_utilization"] = (loader_busy / tot["cycles"]
+                                 if tot["cycles"] else 0.0)
+    tot["transfers"] = float(transfers)
+    return tot
 
 
 def gemm_labels(graph: TaskGraph) -> "list[str]":
@@ -298,40 +402,33 @@ def _subgraph_for_gemm(graph: TaskGraph, label: str) -> TaskGraph:
     for node in graph.nodes:
         if node.kind == "matmul" and node.layer == label:
             remap[node.nid] = sub.add(
-                "matmul", node.name, layer=node.layer, task=node.task,
-                tile=node.tile).nid
+                "matmul", node.name, layer=node.layer, unit=node.unit,
+                task=node.task, tile=node.tile).nid
         elif node.kind == "vector" and node.epilogue is not None:
-            mdeps = [d for d in node.deps
-                     if graph.nodes[d].kind == "matmul"]
+            mdeps = [t.nid for t in matmul_dep_tiles(graph, node)]
             if mdeps and all(d in remap for d in mdeps):
                 sub.add("vector", node.name,
                         deps=tuple(remap[d] for d in mdeps),
-                        layer=node.layer, vector_ops=dict(node.vector_ops),
+                        layer=node.layer, unit=node.unit,
+                        vector_ops=dict(node.vector_ops),
                         epilogue=node.epilogue)
     return sub
 
 
-def execute_workload_jax(graph: TaskGraph, operands: "dict[str, object]", *,
-                         engine: Optional[AsyncMatmulEngine] = None,
-                         ) -> "dict[str, jax.Array]":
-    """Execute a multi-GEMM schedule TaskGraph on real arrays.
-
-    ``operands`` maps a GEMM label (see :func:`gemm_labels`) to its
-    arrays: an ``(a, b)`` tuple, an ``(a, b, EpilogueOperands)`` triple,
-    or any object with ``.a``/``.b`` (and optionally ``.epilogue``)
-    attributes such as ``repro.backend.MatMulOperands``.  Each GEMM is
-    executed through :func:`execute_graph_jax` in schedule order; GEMMs
-    without operands are skipped (a schedule may be only partially
-    concrete).  Returns ``{label: output array}``.
-    """
-    engine = engine or AsyncMatmulEngine()
+def iter_gemm_operands(graph: TaskGraph, operands: "dict[str, object]"):
+    """Validate + normalise a ``{gemm label: operands}`` dict against a
+    schedule graph; yields ``(label, a, b, epilogue_operands)`` in
+    schedule order.  Accepted per-GEMM forms: an ``(a, b)`` tuple, an
+    ``(a, b, EpilogueOperands)`` triple, or any object with ``.a``/
+    ``.b`` (and optionally ``.epilogue``) attributes such as
+    ``repro.backend.MatMulOperands``.  GEMMs without operands are
+    skipped (a schedule may be only partially concrete)."""
     labels = gemm_labels(graph)
     unknown = set(operands) - set(labels)
     if unknown:
         raise KeyError(
             f"operands for unknown GEMM labels {sorted(unknown)[:4]}; "
             f"graph has {labels[:4]}...")
-    outs: "dict[str, jax.Array]" = {}
     for label in labels:
         ops = operands.get(label)
         if ops is None:
@@ -342,6 +439,22 @@ def execute_workload_jax(graph: TaskGraph, operands: "dict[str, object]", *,
         else:
             a, b = ops.a, ops.b
             eops = getattr(ops, "epilogue", NO_OPERANDS)
+        yield label, a, b, eops
+
+
+def execute_workload_jax(graph: TaskGraph, operands: "dict[str, object]", *,
+                         engine: Optional[AsyncMatmulEngine] = None,
+                         ) -> "dict[str, jax.Array]":
+    """Execute a multi-GEMM schedule TaskGraph on real arrays.
+
+    ``operands`` maps a GEMM label (see :func:`gemm_labels`) to its
+    arrays (the forms :func:`iter_gemm_operands` accepts).  Each GEMM is
+    executed through :func:`execute_graph_jax` in schedule order.
+    Returns ``{label: output array}``.
+    """
+    engine = engine or AsyncMatmulEngine()
+    outs: "dict[str, jax.Array]" = {}
+    for label, a, b, eops in iter_gemm_operands(graph, operands):
         outs[label] = execute_graph_jax(
             _subgraph_for_gemm(graph, label), a, b, operands=eops,
             engine=engine)

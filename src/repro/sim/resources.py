@@ -19,10 +19,20 @@ costs part of a burst plus a row-activation bubble.  The platform's flat
 tile panels (64-byte runs); runs at or above that reference stream at
 the calibrated rate, shorter runs — a narrow tile cut from a wide
 row-major matrix, i.e. ``MatMulTask.stride_b ≫ n`` — degrade sharply.
+
+``BandwidthResource`` and ``ClusterTopology`` generalise the machine
+beyond one matrix unit: a cluster is N units — each with its own
+dispatcher, scratchpad banks, PE array and vector unit — contending for
+one shared memory loader.  The loader partitions its bandwidth under a
+configurable policy (``fair``: processor sharing, every in-flight
+transfer streams at ``BW / n_active``; ``fcfs``: serial FIFO at full
+bandwidth), which is exactly the contention knob multi-unit scale-out
+studies (CAMP, arXiv 2504.08137) show decides delivered throughput.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 from collections import deque
 from typing import Callable, Optional
@@ -140,3 +150,193 @@ class Resource:
             self.loop.after(duration, _done)
 
         self.acquire(_granted)
+
+
+# ---------------------------------------------------------------------------
+# Shared-bandwidth server: the cluster's one memory loader.
+# ---------------------------------------------------------------------------
+
+class _Flow:
+    __slots__ = ("work_left", "label", "then", "start")
+
+    def __init__(self, work, label, then, start):
+        self.work_left = work
+        self.label = label
+        self.then = then
+        self.start = start
+
+
+class BandwidthResource:
+    """A bandwidth server shared by many clients.
+
+    A *transfer* is expressed in **work units** — cycles the transfer
+    would take with the full bandwidth to itself (so per-operand stride
+    derates are already folded in by the caller).  Two partition
+    policies:
+
+    * ``"fair"`` — processor sharing: every in-flight transfer streams
+      at ``1 / n_active`` of the bandwidth, the hardware idealisation of
+      a round-robin/interleaved DRAM controller.  A transfer that would
+      take T cycles alone takes up to ``n·T`` under n-way contention.
+    * ``"fcfs"`` — serial FIFO at full bandwidth: one transfer at a
+      time, later arrivals queue.  With one client this is exactly the
+      classic single-unit ``Resource`` loader.
+
+    ``intervals`` records per-transfer ``(start, end, label)`` spans for
+    the trace (overlapping under ``fair``); ``busy_intervals`` records
+    the union busy periods of the server, which is what utilization /
+    saturation should be judged on.
+    """
+
+    def __init__(self, loop: EventLoop, name: str, policy: str = "fair"):
+        if policy not in ("fair", "fcfs"):
+            raise ValueError(f"unknown loader policy {policy!r}; "
+                             "use 'fair' or 'fcfs'")
+        self.loop = loop
+        self.name = name
+        self.policy = policy
+        self.capacity = 1
+        self.intervals: "list[tuple[float, float, str]]" = []
+        self.busy_intervals: "list[tuple[float, float, str]]" = []
+        # fair-share state
+        self._active: "list[_Flow]" = []
+        self._last_t = 0.0
+        self._epoch = 0
+        self._busy_since: Optional[float] = None
+        # fcfs state
+        self._fifo = Resource(loop, name) if policy == "fcfs" else None
+
+    def transfer(self, work: float, label: str,
+                 then: Optional[Callable[[], None]] = None) -> None:
+        """Stream ``work`` (full-bandwidth cycles) through the loader."""
+        if self.policy == "fcfs":
+            self._fcfs_transfer(work, label, then)
+            return
+        self._settle()
+        if not self._active:
+            self._busy_since = self.loop.now
+        self._active.append(_Flow(max(work, 0.0), label, then,
+                                  self.loop.now))
+        self._reschedule()
+
+    # -- fcfs ---------------------------------------------------------------
+    def _fcfs_transfer(self, work, label, then):
+        # Resource.busy with both interval lists populated.
+        def _granted():
+            start = self.loop.now
+
+            def _end():
+                self.intervals.append((start, self.loop.now, label))
+                self.busy_intervals.append((start, self.loop.now, label))
+                self._fifo.release()
+                if then is not None:
+                    then()
+
+            self.loop.after(work, _end)
+
+        self._fifo.acquire(_granted)
+
+    # -- fair share ---------------------------------------------------------
+    def _settle(self) -> None:
+        """Advance every in-flight transfer to ``now`` at the shared rate."""
+        dt = self.loop.now - self._last_t
+        if dt > 0 and self._active:
+            rate = 1.0 / len(self._active)
+            for f in self._active:
+                f.work_left -= dt * rate
+        self._last_t = self.loop.now
+
+    def _reschedule(self) -> None:
+        self._epoch += 1
+        if not self._active:
+            return
+        rate = 1.0 / len(self._active)
+        t_next = min(f.work_left for f in self._active) / rate
+        epoch = self._epoch
+        self.loop.after(max(t_next, 0.0), lambda: self._fire(epoch))
+
+    def _fire(self, epoch: int) -> None:
+        if epoch != self._epoch:            # superseded by a newer arrival
+            return
+        self._settle()
+        done = [f for f in self._active if f.work_left <= 1e-9]
+        self._active = [f for f in self._active if f.work_left > 1e-9]
+        now = self.loop.now
+        for f in done:
+            self.intervals.append((f.start, now, f.label))
+        if not self._active and self._busy_since is not None:
+            self.busy_intervals.append((self._busy_since, now, "busy"))
+            self._busy_since = None
+        self._reschedule()
+        for f in done:                       # callbacks may start new flows
+            if f.then is not None:
+                f.then()
+
+    def busy_cycles(self) -> float:
+        """Union busy time (in-flight tail included)."""
+        tail = 0.0
+        if self.policy == "fair" and self._busy_since is not None:
+            tail = self.loop.now - self._busy_since
+        return sum(e - s for s, e, _ in self.busy_intervals) + tail
+
+
+# ---------------------------------------------------------------------------
+# Cluster topology: N matrix units behind one shared loader.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClusterTopology:
+    """The machine a multi-unit deployment implies (scale-out mirror of
+    ``MatrixUnitConfig``): ``n_units`` identical matrix units, each with
+    a private dispatcher, scratchpad banks, PE array and vector unit,
+    all loading through one shared memory loader.
+
+    ``total_bandwidth`` is the pooled loader bandwidth.  The default
+    (``None``) assumes every unit brings its own memory channel into the
+    pool — ``n_units × unit.bandwidth`` — so weak scaling is limited by
+    *contention/interleaving*, not raw starvation; pass a fixed value to
+    study where the shared loader saturates.
+
+    ``k_stream`` enables K-chunked scratchpad streaming (``k_scp``
+    granularity): a tile's loads arrive chunk by chunk and its compute
+    starts after the first chunk, overlapping fill with compute inside a
+    single tile (ROADMAP DES-fidelity item).
+    """
+
+    n_units: int = 1
+    unit: object = None               # MatrixUnitConfig (default CASE_STUDY)
+    platform: object = None           # CpuPlatform (default SHUTTLE)
+    vector: object = None             # VectorUnit (default SATURN_512)
+    loader_policy: str = "fair"       # "fair" | "fcfs"
+    total_bandwidth: Optional[float] = None
+    k_stream: bool = True
+
+    def __post_init__(self):
+        if self.n_units < 1:
+            raise ValueError(f"n_units must be >= 1, got {self.n_units}")
+        if self.loader_policy not in ("fair", "fcfs"):
+            raise ValueError(
+                f"unknown loader policy {self.loader_policy!r}")
+        if self.unit is None or self.platform is None or self.vector is None:
+            from repro.core.config import CASE_STUDY
+            from repro.core.hardware import SHUTTLE
+            from repro.core.simulator import SATURN_512
+            object.__setattr__(self, "unit", self.unit or CASE_STUDY)
+            object.__setattr__(self, "platform", self.platform or SHUTTLE)
+            object.__setattr__(self, "vector", self.vector or SATURN_512)
+
+    @property
+    def loader_bandwidth(self) -> float:
+        if self.total_bandwidth is not None:
+            return self.total_bandwidth
+        return self.n_units * self.unit.bandwidth
+
+    def with_(self, **kw) -> "ClusterTopology":
+        return dataclasses.replace(self, **kw)
+
+    def describe(self) -> str:
+        from repro.core.hardware import GIGA
+        return (f"{self.n_units} unit(s) x [{self.unit.describe()}], "
+                f"shared loader {self.loader_bandwidth / GIGA:.0f} GB/s "
+                f"({self.loader_policy})"
+                + (", k-stream" if self.k_stream else ""))

@@ -1,8 +1,14 @@
 """Chrome-trace (Trace Event Format) export of DESim timelines.
 
 The emitted JSON loads directly in Perfetto (https://ui.perfetto.dev)
-or chrome://tracing: one row per machine resource, one complete ("X")
-event per busy interval, timestamps in microseconds of simulated time.
+or chrome://tracing: one *process* per matrix unit (plus pid 0 for
+shared resources — the memory loader), one *thread* row per resource,
+one complete ("X") event per busy interval, timestamps in microseconds
+of simulated time.  Cluster results (``simulate_cluster``) name unit
+resources ``u<i>/<resource>``; the exporter splits that prefix into the
+process so each unit renders as its own track group instead of
+interleaving on one row.  Overlapping events on the shared loader row
+are the fair-share contention, made visible.
 """
 
 from __future__ import annotations
@@ -16,32 +22,62 @@ _RESOURCE_ORDER = ("dispatcher", "mem_loader", "scratchpad", "pe_array",
                    "vector_unit")
 
 
+def _split(resource: str) -> "tuple[int, str]":
+    """``"u3/pe_array" -> (4, "pe_array")``; shared/unprefixed -> pid 0."""
+    if resource.startswith("u") and "/" in resource:
+        head, _, rest = resource.partition("/")
+        if head[1:].isdigit():
+            return int(head[1:]) + 1, rest
+    return 0, resource
+
+
+def _order(name: str) -> int:
+    return _RESOURCE_ORDER.index(name) if name in _RESOURCE_ORDER \
+        else len(_RESOURCE_ORDER)
+
+
 def chrome_trace(result: DESimResult, *, process_name: str = "cutev2-desim",
                  ) -> dict:
     """Trace Event Format dict: ``{"traceEvents": [...], ...}``."""
     us_per_cycle = 1e6 / result.freq_hz
     events = []
-    names = [r for r in _RESOURCE_ORDER if r in result.intervals]
-    names += [r for r in result.intervals if r not in names]
-    events.append({"name": "process_name", "ph": "M", "pid": 0,
-                   "args": {"name": process_name}})
-    for tid, rname in enumerate(names):
-        events.append({"name": "thread_name", "ph": "M", "pid": 0,
-                       "tid": tid, "args": {"name": rname}})
+    rows = sorted(((_split(r), r) for r in result.intervals),
+                  key=lambda x: (x[0][0], _order(x[0][1])))
+    pids_seen = set()
+    tids: "dict[int, int]" = {}
+    for (pid, thread), rname in rows:
+        if pid not in pids_seen:
+            pids_seen.add(pid)
+            pname = process_name if pid == 0 else \
+                f"{process_name}/unit{pid - 1}"
+            events.append({"name": "process_name", "ph": "M", "pid": pid,
+                           "args": {"name": pname}})
+        tid = tids.get(pid, 0)
+        tids[pid] = tid + 1
+        events.append({"name": "thread_name", "ph": "M", "pid": pid,
+                       "tid": tid, "args": {"name": thread}})
         for start, end, label in result.intervals[rname]:
             events.append({
-                "name": label, "cat": rname, "ph": "X", "pid": 0, "tid": tid,
+                "name": label, "cat": rname, "ph": "X", "pid": pid,
+                "tid": tid,
                 "ts": start * us_per_cycle,
                 "dur": max(end - start, 0.0) * us_per_cycle,
             })
+    other = {
+        "total_cycles": result.cycles,
+        "matrix_utilization": result.matrix_utilization,
+        "resource_utilization": result.utilizations(),
+    }
+    n_units = getattr(result, "n_units", 1)
+    if n_units > 1:
+        other["n_units"] = n_units
+        other["aggregate_matrix_utilization"] = \
+            result.aggregate_matrix_utilization
+        other["loader_utilization"] = result.loader_utilization
     return {
         "traceEvents": events,
         "displayTimeUnit": "ms",
-        "otherData": {
-            "total_cycles": result.cycles,
-            "matrix_utilization": result.matrix_utilization,
-            "resource_utilization": result.utilizations(),
-        },
+        "otherData": other,
     }
 
 

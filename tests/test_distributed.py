@@ -151,6 +151,21 @@ _SUBPROCESS_PROG = textwrap.dedent("""
     out["cmm_has_ppermute"] = "collective-permute" in hlo
     out["cmm_has_allgather"] = "all-gather(" in hlo
 
+    # ---- collective matmul == single-device cute_matmul (kernel path) --
+    from repro.core.fusion import cute_matmul
+    ref_kernel = cute_matmul(x, w, backend="xla")
+    out["cmm_vs_kernel_err"] = float(
+        jnp.abs(y - ref_kernel).max() / (jnp.abs(ref_kernel).max() + 1e-9))
+    # int8 through the same mesh shim: bit-exact against the kernel path
+    xi = jax.random.randint(jax.random.PRNGKey(5), (64, 32), -8, 8,
+                            jnp.int8).astype(jnp.int32)
+    wi = jax.random.randint(jax.random.PRNGKey(6), (32, 64), -8, 8,
+                            jnp.int8).astype(jnp.int32)
+    yi = collective_matmul(xi, wi, mesh)
+    ri = cute_matmul(xi.astype(jnp.int8), wi.astype(jnp.int8),
+                     backend="xla")
+    out["cmm_int8_exact"] = bool((yi == ri).all())
+
     # ---- sharded MoE == single-shard MoE ------------------------------
     from repro.configs.registry import get_config
     from repro.models.moe import moe_init, moe_apply, moe_apply_local
@@ -207,6 +222,13 @@ class TestMultiDevice:
         """The point of the pattern: ppermute chain, no all-gather of X."""
         assert multidevice_results["cmm_has_ppermute"]
         assert not multidevice_results["cmm_has_allgather"]
+
+    def test_collective_matmul_matches_cute_matmul(self, multidevice_results):
+        """Parity against the kernel path (``cute_matmul``) under the
+        mesh shim, not just the local einsum reference — fp32 within
+        tolerance, int8 accumulation bit-exact."""
+        assert multidevice_results["cmm_vs_kernel_err"] < 1e-5
+        assert multidevice_results["cmm_int8_exact"]
 
     def test_moe_ep_sharding_equivalent(self, multidevice_results):
         assert multidevice_results["moe_err"] < 1e-4
