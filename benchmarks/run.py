@@ -23,6 +23,14 @@ ENGINE = "analytical"
 #: supports it) for the workload pricer.  Set by --units.
 UNITS = 1
 
+#: True when --units was given explicitly (the serving bench defaults
+#: its cluster point to 2 units otherwise).
+UNITS_SET = False
+
+#: Serving batching policies the serving bench compares; --policy
+#: restricts the sweep to one of them (or "auto").
+POLICY = None
+
 
 def workload_sim():
     """The model-level simulator the --engine registry lookup selects
@@ -341,6 +349,48 @@ def bench_cluster():
 
 
 # ---------------------------------------------------------------------------
+# Serving scheduler: batching policies priced on cluster timelines.
+# ---------------------------------------------------------------------------
+
+def bench_serving():
+    """Decode first-token p50/p99 + aggregate matrix utilization per
+    batching policy on a Llama-style config (yi-6b reduced, 6 requests),
+    priced by the contention-aware analytical closed form — single unit
+    and the ``--units`` cluster (default 2)."""
+    import jax
+    from repro.configs.registry import get_config
+    from repro.serving.engine import ServingEngine
+    from repro.serving.scheduler import (available_policies,
+                                         schedule_metrics)
+
+    cfg = get_config("yi-6b", reduced=True)
+    eng = ServingEngine(cfg, params=None, max_batch=2, cache_len=256)
+    key = jax.random.PRNGKey(0)
+    for i in range(6):
+        key, sub = jax.random.split(key)
+        eng.submit(jax.random.randint(sub, (64 + 32 * i,), 0,
+                                      cfg.vocab_size))
+
+    cluster = UNITS if UNITS_SET else 2
+    sweep = (1,) if cluster == 1 else (1, cluster)
+    policies = [POLICY] if POLICY else list(available_policies()) + ["auto"]
+    for pol in policies:
+        for u in sweep:
+            def run(pol=pol, u=u):
+                sched = eng.plan(max_new_tokens=16, units=u, policy=pol)
+                return sched, schedule_metrics(sched, cfg.n_layers,
+                                               "analytical")
+
+            (sched, m), us = timed(run)
+            emit(f"serving_{pol}_u{u}", us,
+                 f"policy={sched.policy} decode_p50={m['decode_p50']:.0f} "
+                 f"decode_p99={m['decode_p99']:.0f} "
+                 f"itl_p50={m['itl_p50']:.0f} "
+                 f"agg_matrix_util={m['matrix_utilization']:.3f} "
+                 f"makespan={m['makespan']:.0f}")
+
+
+# ---------------------------------------------------------------------------
 # Table 7 — area/power.
 # ---------------------------------------------------------------------------
 
@@ -420,6 +470,7 @@ BENCHES = {
     "overlap": bench_overlap_contribution,
     "desim": bench_desim,
     "cluster": bench_cluster,
+    "serving": bench_serving,
     "table7": bench_table7_area,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
@@ -427,7 +478,7 @@ BENCHES = {
 
 
 def main() -> None:
-    global ENGINE, UNITS
+    global ENGINE, UNITS, UNITS_SET, POLICY
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=tuple(BENCHES), default=None)
     ap.add_argument("--engine", default="analytical",
@@ -437,19 +488,27 @@ def main() -> None:
                          "discrete-event TaskGraph runtime) or "
                          "'desim-cluster' (multi-unit contended DES; "
                          "combine with --units)")
-    ap.add_argument("--units", type=int, default=1,
-                    help="matrix units for the cluster bench sweep and, "
-                         "when --engine supports it (desim-cluster), for "
-                         "the workload pricer")
+    ap.add_argument("--units", type=int, default=None,
+                    help="matrix units for the cluster bench sweep, the "
+                         "serving bench's cluster point (default 2) and, "
+                         "when --engine supports it (desim-cluster, "
+                         "analytical), the workload pricer")
+    ap.add_argument("--policy", default=None,
+                    choices=("full-prefill", "chunked-prefill",
+                             "decode-priority", "auto"),
+                    help="restrict the serving bench to one batching "
+                         "policy (default: sweep all + auto)")
     args = ap.parse_args()
     from repro import backend
     try:
         ENGINE = backend.resolve(args.engine)
     except KeyError as e:
         ap.error(str(e))
-    if args.units < 1:
+    if args.units is not None and args.units < 1:
         ap.error(f"--units must be >= 1, got {args.units}")
-    UNITS = args.units
+    UNITS_SET = args.units is not None
+    UNITS = args.units if UNITS_SET else 1
+    POLICY = args.policy
     probe = backend.get(ENGINE)
     if UNITS != 1 and not probe.supports_units and args.only != "cluster":
         ap.error(f"--units {UNITS} needs a cluster-aware --engine "

@@ -9,9 +9,25 @@ status-poll as drain; fused epilogues overlap as ``max(matrix, vector)``
 with one epilogue share exposed (paper Listing 1).  Where the desim
 backend *derives* the makespan from the event schedule, this backend
 asserts it — the cross-backend parity suite pins the two within ~1%.
-``run_workload`` is ``simulate_workload`` verbatim (the paper's
-model-level analytical numbers).  No array outputs are produced — this
-backend answers "how long", not "what".
+
+``units > 1`` (or an explicit — possibly heterogeneous —
+``ClusterTopology``) switches to the **contention-aware cluster form**:
+the graph is sharded by ``sim.partition`` exactly as ``desim-cluster``
+would shard it, each unit's stream is priced with that unit's own
+geometry and k-streamed fill, and the shared memory loader is priced as
+a processor-sharing server: a unit's transfers are derated by the
+M/G/1-PS slowdown ``1 / (1 - ρ_other)`` (capped at the number of
+contending units), where ``ρ_other`` is the fraction of the group
+makespan the *other* units' traffic occupies — solved by a short fixed
+point, with the pool's aggregate capacity ``Σ shared work`` as the
+saturation bound.  Validated ≤5% against ``desim-cluster`` on the paper
+GEMM regime, so ``ServingEngine.plan`` can price (policy × partition ×
+topology) candidates without running the DES.
+
+``run_workload`` is ``simulate_workload`` verbatim for a single unit
+(the paper's model-level analytical numbers) and the per-layer cluster
+form for ``units > 1``.  No array outputs are produced — this backend
+answers "how long", not "what".
 """
 
 from __future__ import annotations
@@ -19,25 +35,37 @@ from __future__ import annotations
 import re
 from typing import Callable
 
-from repro.backend.base import Backend, ExecResult, GraphOperands, \
-    MatMulOperands
+from repro.backend.base import ExecResult, GraphOperands, MatMulOperands
+from repro.backend.cluster_backend import PartitionedBackend
 from repro.backend.registry import register
 from repro.core.fusion import Epilogue, NO_EPILOGUE
 from repro.core.task import MatMulTask
 
 _GEMM_SUFFIX = re.compile(r"/g\d+$")
 
+#: fixed-point sweeps for the shared-loader slowdown (converges in 2-3).
+_CONTENTION_ITERS = 6
+
 
 @register("analytical")
-class AnalyticalBackend(Backend):
+class AnalyticalBackend(PartitionedBackend):
     """First-order cost estimates from the closed-form model."""
 
     models_time = True
+
+    def __init__(self, units: int = 1, strategy: str = "row-panel", **kw):
+        super().__init__(units=units, strategy=strategy, **kw)
+
+    @property
+    def _cluster(self) -> bool:
+        return self.units > 1 or self._topology is not None
 
     def _stage(self, task: MatMulTask, operands: MatMulOperands,
                epilogue: Epilogue) -> Callable[[], ExecResult]:
         ep = None if epilogue is NO_EPILOGUE else epilogue
         graph = self.lower(task, epilogue=ep)
+        if self._cluster:
+            graph = self.partition(graph)
         return lambda: self.run_graph(graph)
 
     def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
@@ -49,8 +77,12 @@ class AnalyticalBackend(Backend):
         raced against the serial dispatch/check stream, and fused vector
         work overlaps it as ``max(matrix, vector)`` plus one exposed
         epilogue share.  Unfused groups (an explicit memory round-trip)
-        serialise matrix, memory and vector phases.
+        serialise matrix, memory and vector phases.  With ``units > 1``
+        the same walk runs per (group, unit) on the partitioned graph
+        with the contention-aware shared-loader derate.
         """
+        if self._cluster:
+            return self._run_graph_cluster(graph)
         from repro.sim.desim import build_machine, tile_costs
         machine = build_machine(self.unit, self.platform, self.vector)
         plat = self.platform
@@ -128,11 +160,173 @@ class AnalyticalBackend(Backend):
                           utilization=ideal / cycles if cycles else 0.0,
                           detail=detail)
 
+    # ----- contention-aware cluster closed form ----------------------------
+    def _run_graph_cluster(self, graph, topology=None) -> ExecResult:
+        from repro.sim.desim import tile_chunks, tile_work
+        part = self.partition(graph)
+        topo = topology if topology is not None else self.topology()
+        plat = topo.platform
+        freq = topo.unit.freq_hz
+        pool_bpc = topo.shared_bandwidth / freq
+        mem_bpc = pool_bpc * plat.dram_efficiency
+
+        # Group by layer (serial chain), then by owning unit within a
+        # group (units run a group's shards concurrently).
+        groups: "dict[str, dict]" = {}
+        order: "list[str]" = []
+        ideal = 0.0
+        for node in part.graph.topo_order():
+            key = _GEMM_SUFFIX.sub("", node.layer)
+            if key not in groups:
+                groups[key] = {"units": {}, "mem": 0.0}
+                order.append(key)
+            g = groups[key]
+            u = node.unit
+            if node.kind == "memory":
+                # inter-unit transfers / spills ride the shared pool.
+                g["mem"] += node.mem_bytes / mem_bpc
+                continue
+            st = g["units"].setdefault(
+                u, {"tiles": [], "vec": 0.0, "n_vec": 0})
+            if node.kind == "matmul":
+                cfg = topo.unit_config(u)
+                private = topo.private_bandwidth(u)
+                bpc = private / freq if private > 0 else pool_bpc
+                w = tile_work(cfg, plat, node)
+                fill_bytes = (tile_chunks(cfg, plat, node)[0][0]
+                              if topo.k_stream else w["load_eff"])
+                st["tiles"].append({
+                    "compute": w["compute"],
+                    "load": w["load_eff"] / bpc,
+                    "writeback": w["wb_eff"] / bpc,
+                    "fill": fill_bytes / bpc,
+                    "shared": private <= 0,
+                    "cfg": cfg,
+                })
+                ideal += (node.task.macs
+                          / cfg.macs_per_cycle(node.task.data_type))
+            else:
+                st["vec"] += topo.vector.cycles_for(node.vector_ops)
+                st["n_vec"] += 1
+
+        cycles = 0.0
+        shared_total = 0.0
+        detail = {"groups": len(order), "memory": 0.0}
+        for key in order:
+            g = groups[key]
+            t, shared = self._cluster_group_cycles(g, plat)
+            cycles += t + g["mem"]
+            shared_total += shared + g["mem"]
+            detail["memory"] += g["mem"]
+        detail["loader_utilization"] = (shared_total / cycles
+                                        if cycles else 0.0)
+        detail["partition"] = {"strategy": part.strategy,
+                               "n_units": part.n_units,
+                               "transfers": part.n_transfers,
+                               "transfer_bytes": part.transfer_bytes}
+        n = topo.n_units
+        return ExecResult(
+            cycles=cycles, seconds=cycles / freq,
+            utilization=ideal / (cycles * n) if cycles else 0.0,
+            detail=detail)
+
+    def _cluster_group_cycles(self, g: dict, plat) -> "tuple[float, float]":
+        """One layer group on the cluster: per-unit streams raced
+        concurrently, shared-loader traffic derated by the PS slowdown
+        fixed point, the pool's aggregate capacity as the floor.
+        Returns ``(group cycles, shared loader work)``."""
+        units = g["units"]
+        if not units:
+            return 0.0, 0.0
+        shared_work = {
+            u: sum(t["load"] + t["writeback"] for t in st["tiles"]
+                   if t["shared"])
+            for u, st in units.items()}
+        total_shared = sum(shared_work.values())
+        contenders = [u for u, w in shared_work.items() if w > 0]
+
+        def unit_time(u: int, s: float) -> float:
+            st = units[u]
+            tiles, vec = st["tiles"], st["vec"]
+            if not tiles:
+                return vec
+
+            def derate(t):                 # slowdown on shared traffic only
+                return s if t["shared"] else 1.0
+
+            last = tiles[-1]
+            cfg = last["cfg"]
+            pe_stream = (tiles[0]["fill"] * derate(tiles[0])
+                         + sum(t["compute"] for t in tiles)
+                         + max(last["writeback"] * derate(last),
+                               cfg.pe_pipeline_stages + plat.check_cycles))
+            backlog = (min(len(tiles) - 1, 2)
+                       * last["writeback"] * derate(last))
+            loader_stream = (sum((t["load"] + t["writeback"]) * derate(t)
+                                 for t in tiles)
+                             + max(0.0, last["compute"] - backlog))
+            dispatch = len(tiles) * (plat.dispatch_cycles
+                                     + plat.check_cycles)
+            matrix = plat.dispatch_cycles + max(pe_stream, loader_stream,
+                                                dispatch)
+            if st["n_vec"] > 1:
+                share = vec / st["n_vec"]
+                if loader_stream > max(pe_stream, dispatch):
+                    share = max(0.0, share
+                                - 3.0 * last["writeback"] * derate(last))
+                fill = (plat.dispatch_cycles
+                        + tiles[0]["load"] * derate(tiles[0])
+                        + tiles[0]["compute"])
+                return max(matrix + share, fill + vec)
+            return matrix + vec
+
+        slow = {u: 1.0 for u in units}
+        t_group = 0.0
+        for _ in range(_CONTENTION_ITERS):
+            t_group = max(unit_time(u, slow[u]) for u in units)
+            t_group = max(t_group, total_shared)     # pool capacity floor
+            cap = float(max(len(contenders), 1))
+            for u in contenders:
+                rho_other = (total_shared - shared_work[u]) / t_group
+                slow[u] = (min(cap, 1.0 / (1.0 - rho_other))
+                           if rho_other < 1.0 else cap)
+        return t_group, total_shared
+
     def run_workload(self, layers, *, fused=None, unit=None, platform=None,
                      vector=None):
+        fused = self.fused if fused is None else fused
+        if self._cluster:
+            return self._run_workload_cluster(
+                layers, fused=fused,
+                topology=self.topology(unit, platform, vector))
         from repro.core.simulator import simulate_workload
         return simulate_workload(
             unit or self.unit, layers,
             platform=platform or self.platform,
-            vector=vector or self.vector,
-            fused=self.fused if fused is None else fused)
+            vector=vector or self.vector, fused=fused)
+
+    def _run_workload_cluster(self, layers, *, fused: bool, topology):
+        """``sim.lower.cluster_workload``'s dict shape, priced by the
+        closed form instead of the DES: per layer, partition the graph
+        across the topology's units and apply the contended formula."""
+        from repro.sim.lower import aggregate_cluster_workload, \
+            layer_to_graph
+
+        def price_layer(layer):
+            graph, _ = layer_to_graph(topology.unit, layer, fused=fused,
+                                      granularity=self.granularity,
+                                      platform=topology.platform)
+            part = self.partition(graph)
+            r = self._run_graph_cluster(part, topology)
+            ideal = r.utilization * r.cycles * topology.n_units
+            return {
+                "cycles": r.cycles,
+                "matrix": ideal,       # first order: busy PE == ideal
+                "vector": sum(topology.vector.cycles_for(n.vector_ops)
+                              for n in part.graph.vector_nodes()),
+                "ideal": ideal,
+                "loader_busy": r.detail["loader_utilization"] * r.cycles,
+                "transfers": part.n_transfers,
+            }
+
+        return aggregate_cluster_workload(topology, layers, price_layer)

@@ -25,18 +25,59 @@ from repro.sim.resources import ClusterTopology
 
 
 class PartitionedBackend(Backend):
-    """Shared plumbing for the cluster backends: a ``units``-wide
-    partition strategy and TaskGraph sharding via ``sim.partition``."""
+    """Shared plumbing for the cluster-aware backends: a ``units``-wide
+    partition strategy, TaskGraph sharding via ``sim.partition``, and
+    the :class:`~repro.sim.resources.ClusterTopology` the modelling
+    halves price against.
+
+    ``affinity``/``weights`` feed the ``unit-affinity`` strategy — a
+    serving policy's per-step placement hints plus relative per-unit
+    throughputs (heterogeneous clusters).  An explicit (possibly
+    heterogeneous) ``topology`` wins over the scalar knobs: it fixes
+    the cluster width and supplies the partitioner's throughput
+    weights, so mixed-unit deployments price correctly.
+    """
 
     supports_units = True
 
-    def __init__(self, units: int = 2, strategy: str = "row-panel", **kw):
+    def __init__(self, units: int = 2, strategy: str = "row-panel",
+                 affinity: "dict[str, int] | None" = None,
+                 weights: "list[float] | None" = None,
+                 loader_policy: str = "fair",
+                 total_bandwidth: Optional[float] = None,
+                 k_stream: bool = True,
+                 topology: Optional[ClusterTopology] = None, **kw):
         from repro.sim.partition import STRATEGIES
         if strategy not in STRATEGIES:
             raise ValueError(f"unknown partition strategy {strategy!r}; "
                              f"one of {STRATEGIES}")
+        if topology is not None:
+            units = topology.n_units
+            kw.setdefault("unit", topology.unit)
+            kw.setdefault("platform", topology.platform)
+            kw.setdefault("vector", topology.vector)
+            if topology.heterogeneous and weights is None:
+                weights = topology.throughput_weights()
         super().__init__(units=units, **kw)
         self.strategy = strategy
+        self.affinity = affinity
+        self.weights = weights
+        self._topology = topology
+        self.loader_policy = loader_policy
+        self.total_bandwidth = total_bandwidth
+        self.k_stream = k_stream
+
+    def topology(self, unit=None, platform=None,
+                 vector=None) -> ClusterTopology:
+        if self._topology is not None:
+            return self._topology
+        return ClusterTopology(
+            n_units=self.units, unit=unit or self.unit,
+            platform=platform or self.platform,
+            vector=vector or self.vector,
+            loader_policy=self.loader_policy,
+            total_bandwidth=self.total_bandwidth,
+            k_stream=self.k_stream)
 
     def partition(self, graph):
         """Shard an (unpartitioned) TaskGraph for this backend's cluster;
@@ -49,7 +90,9 @@ class PartitionedBackend(Backend):
                     f"graph partitioned for {graph.n_units} unit(s) but "
                     f"backend has units={self.units}")
             return graph
-        return partition_graph(graph, self.units, self.strategy)
+        return partition_graph(graph, self.units, self.strategy,
+                               affinity=self.affinity,
+                               weights=self.weights)
 
 
 @register("desim-cluster")
@@ -59,25 +102,6 @@ class ClusterDESimBackend(PartitionedBackend):
     executes = True
     models_time = True
     matmul_string = "xla"           # numeric half runs through XLA
-
-    def __init__(self, units: int = 2, strategy: str = "row-panel",
-                 loader_policy: str = "fair",
-                 total_bandwidth: Optional[float] = None,
-                 k_stream: bool = True, **kw):
-        super().__init__(units=units, strategy=strategy, **kw)
-        self.loader_policy = loader_policy
-        self.total_bandwidth = total_bandwidth
-        self.k_stream = k_stream
-
-    def topology(self, unit=None, platform=None,
-                 vector=None) -> ClusterTopology:
-        return ClusterTopology(
-            n_units=self.units, unit=unit or self.unit,
-            platform=platform or self.platform,
-            vector=vector or self.vector,
-            loader_policy=self.loader_policy,
-            total_bandwidth=self.total_bandwidth,
-            k_stream=self.k_stream)
 
     def _stage(self, task: MatMulTask, operands: MatMulOperands,
                epilogue: Epilogue) -> Callable[[], ExecResult]:
@@ -119,4 +143,5 @@ class ClusterDESimBackend(PartitionedBackend):
             self.topology(unit, platform, vector), layers,
             strategy=self.strategy,
             fused=self.fused if fused is None else fused,
-            granularity=self.granularity)
+            granularity=self.granularity,
+            affinity=self.affinity, weights=self.weights)

@@ -40,12 +40,22 @@ def main(argv=None):
     ap.add_argument("--plan-units", type=int, default=1,
                     help="cluster width for --plan: shard every schedule "
                          "step across N matrix units sharing the memory "
-                         "loader (use with --plan desim-cluster)")
+                         "loader (use with --plan desim-cluster or the "
+                         "contention-aware analytical form)")
     ap.add_argument("--plan-strategy", default=None,
-                    choices=("row-panel", "output-tile", "layer-pipeline"),
-                    help="partition strategy for --plan desim-cluster "
+                    choices=("row-panel", "output-tile", "layer-pipeline",
+                             "unit-affinity"),
+                    help="partition strategy for a cluster --plan "
                          "(serving GEMMs are wide and short: "
-                         "'output-tile' shards their large N dimension)")
+                         "'output-tile' shards their large N dimension; "
+                         "'unit-affinity' follows the policy's per-step "
+                         "placement hints)")
+    ap.add_argument("--policy", default="full-prefill",
+                    help="serving batching policy for --plan: "
+                         "'full-prefill', 'chunked-prefill', "
+                         "'decode-priority', or 'auto' (price every "
+                         "policy x partition candidate with the "
+                         "analytical closed form and pick the best)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -63,23 +73,39 @@ def main(argv=None):
         key, sub = jax.random.split(key)
         eng.submit(jax.random.randint(sub, (n,), 0, cfg.vocab_size))
     if args.plan:
+        from repro.serving.scheduler import (decode_latency_stats,
+                                             price_steps)
         plan_kw = {}
         if args.plan_strategy is not None:
             plan_kw["strategy"] = args.plan_strategy
         try:
+            # one pricing pass: the per-step costs feed both the
+            # latency stats and the full-schedule total (their sum).
             sched, res = eng.evaluate_schedule(
                 args.plan, max_new_tokens=args.max_new,
-                units=args.plan_units,
-                granularity=args.plan_granularity, **plan_kw)
+                units=args.plan_units, policy=args.policy,
+                granularity=args.plan_granularity, workload=False,
+                **plan_kw)
+            step_cycles = price_steps(sched, args.plan,
+                                      granularity=args.plan_granularity,
+                                      **plan_kw)
+            stats = decode_latency_stats(sched, step_cycles,
+                                         cfg.n_layers)
         except (KeyError, TypeError, ValueError) as e:
             ap.error(f"--plan: {e}")
-        w = res.detail["workload"]
-        print(f"[plan:{args.plan}] {len(sched.steps)} steps "
+        full = sum(step_cycles)
+        full_us = full * res.seconds / res.cycles * 1e6
+        print(f"[plan:{args.plan}] policy={sched.policy}: "
+              f"{len(sched.steps)} steps "
               f"({sum(s.kind == 'prefill' for s in sched.steps)} prefill"
               + (f", {sched.units} units" if sched.units > 1 else "")
               + f"), graph slice {res.cycles:.0f} cyc "
               f"(matrix_util={res.utilization:.1%}); full schedule "
-              f"{w['cycles']:.0f} cyc = {w['seconds'] * 1e6:.1f} us")
+              f"{full:.0f} cyc = {full_us:.1f} us")
+        print(f"[plan:{args.plan}] decode first-token "
+              f"p50={stats['decode_p50']:.0f} cyc "
+              f"p99={stats['decode_p99']:.0f} cyc, inter-token "
+              f"p50={stats['itl_p50']:.0f} cyc")
         if res.timeline is not None:
             utils = " ".join(f"{k}={v:.1%}"
                              for k, v in res.timeline.utilizations().items())

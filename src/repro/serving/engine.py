@@ -20,6 +20,7 @@ The paper's asyncMatMul/checkMatmul contract shows up twice here:
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Optional
 
 import jax
@@ -98,12 +99,21 @@ def generate(cfg: ArchConfig, params, batch, *, max_new_tokens: int,
 
 @dataclasses.dataclass(frozen=True)
 class BatchStep:
-    """One continuous-batching step: a padded batch through the model."""
+    """One continuous-batching step: a padded batch through the model.
 
-    kind: str                    # "prefill" | "decode"
+    ``kind`` is ``"prefill"``, ``"decode"``, or ``"mixed"`` (a chunked-
+    prefill step with decode iterations piggybacked onto the chunk).
+    ``decode_requests`` names the subset of ``requests`` that receives a
+    decode token from this step — empty for pure prefill, and left empty
+    by the classic full-prefill lowering (whose pure decode steps imply
+    ``decode_requests == requests``).
+    """
+
+    kind: str                    # "prefill" | "decode" | "mixed"
     requests: "tuple[int, ...]"  # request ids riding this batch
     tokens: int                  # rows M entering each projection GEMM
     repeat: int                  # model layers (× decode steps for decode)
+    decode_requests: "tuple[int, ...]" = ()
 
 
 @dataclasses.dataclass
@@ -119,11 +129,21 @@ class BatchSchedule:
     a cluster backend (``desim-cluster`` / ``sharded``) shards every
     step's GEMMs across that many matrix units, so the same schedule is
     priced on contended multi-unit timelines.
+
+    ``policy`` names the :mod:`repro.serving.scheduler` batching policy
+    that produced the schedule; ``affinity`` carries that policy's
+    per-step unit hints (``{step layer name: unit}``) for the
+    ``unit-affinity`` partition strategy, and ``strategy`` records the
+    partition strategy ``plan(policy="auto")`` priced the schedule
+    against (``None``: caller's choice).
     """
 
     steps: "list[BatchStep]"
     layers: "list[LayerTrace]"
     units: int = 1
+    policy: str = "full-prefill"
+    affinity: "dict[str, int]" = dataclasses.field(default_factory=dict)
+    strategy: "Optional[str]" = None
 
     def gemm_tasks(self) -> "dict[str, MatMulTask]":
         """``{graph GEMM label: task}`` — the labels
@@ -135,10 +155,19 @@ class BatchSchedule:
                          ) -> "dict[str, tuple]":
         """Random int8 ``(a, b)`` arrays for every GEMM of the schedule —
         lets an executing backend run the identical schedule graph for
-        real (the parity suite checks jax and desim agree bit-exactly)."""
+        real (the parity suite checks jax and desim agree bit-exactly).
+
+        Per-GEMM keys are ``fold_in`` derivations from the *label*, so a
+        GEMM's operands depend only on ``key`` and its own label — two
+        schedules sharing a label (or one schedule re-planned with more
+        steps) get identical arrays, where the old sequential
+        ``jax.random.split`` chain made every operand depend on how many
+        GEMMs preceded it.
+        """
         ops = {}
         for label, t in self.gemm_tasks().items():
-            key, ka, kb = jax.random.split(key, 3)
+            sub = jax.random.fold_in(key, zlib.crc32(label.encode()))
+            ka, kb = jax.random.split(sub)
             ops[label] = (jax.random.randint(ka, (t.m, t.k), low, high,
                                              jnp.int8),
                           jax.random.randint(kb, (t.k, t.n), low, high,
@@ -192,62 +221,97 @@ class ServingEngine:
         return len(self._queue) - 1
 
     # ----- batch schedules -> backends -----------------------------------
-    def plan(self, max_new_tokens: int = 32, units: int = 1) -> BatchSchedule:
+    def _policy_context(self, max_new_tokens: int, units: int):
+        from repro.serving.scheduler import PolicyContext
+        return PolicyContext(
+            cfg=self.cfg,
+            prompt_lengths=tuple(int(t.shape[-1]) for t in self._queue),
+            max_batch=self.max_batch, max_new_tokens=max_new_tokens,
+            units=units)
+
+    def plan(self, max_new_tokens: int = 32, units: int = 1,
+             policy: str = "full-prefill", **policy_kw) -> BatchSchedule:
         """Plan the continuous-batching drain of the current queue
-        (non-destructive): per padded chunk, one prefill step over
-        ``B × S_padded`` tokens, then ``max_new_tokens`` decode steps of
-        ``B`` tokens (collapsed into one repeated LayerTrace).
+        (non-destructive) under a :mod:`repro.serving.scheduler` batching
+        policy.  The default ``full-prefill`` reproduces the classic
+        inline policy bit-identically: per padded chunk, one prefill step
+        over ``B × S_padded`` tokens, then ``max_new_tokens`` decode
+        steps of ``B`` tokens (collapsed into one repeated LayerTrace).
+        ``chunked-prefill`` / ``decode-priority`` interleave prefill
+        chunks with in-flight decode; ``policy="auto"`` prices every
+        (policy × partition) candidate with the contention-aware
+        ``analytical`` closed form and returns the best one.
 
         ``units`` is the cluster width the schedule targets — recorded on
         the schedule and consumed by ``evaluate_schedule`` so a cluster
         backend prices the drain on ``units`` contended matrix units."""
-        steps: "list[BatchStep]" = []
-        layers: "list[LayerTrace]" = []
-        queue = list(self._queue)
-        first = 0
-        while queue:
-            chunk, queue = queue[: self.max_batch], queue[self.max_batch:]
-            ids = tuple(range(first, first + len(chunk)))
-            first += len(chunk)
-            s = max(int(t.shape[-1]) for t in chunk)
-            ci = len(steps) // 2
-            prefill = BatchStep("prefill", ids, tokens=len(chunk) * s,
-                                repeat=self.cfg.n_layers)
-            decode = BatchStep("decode", ids, tokens=len(chunk),
-                               repeat=self.cfg.n_layers * max_new_tokens)
-            for step in (prefill, decode):
-                steps.append(step)
-                layers.append(_step_layer(
-                    self.cfg, f"b{ci}/{step.kind}", step.tokens,
-                    step.repeat))
-        return BatchSchedule(steps, layers, units=units)
+        from repro.serving import scheduler
+        ctx = self._policy_context(max_new_tokens, units)
+        if policy == "auto":
+            # policy kwargs (chunk_tokens, ...) sweep the candidates;
+            # select_schedule's own knobs pass through by name.
+            select = {"backend_name", "objective", "makespan_slack",
+                      "policies", "strategies", "policy_kw"}
+            kw = {k: v for k, v in policy_kw.items() if k in select}
+            extra = {k: v for k, v in policy_kw.items()
+                     if k not in select}
+            if extra:
+                kw["policy_kw"] = {**extra, **kw.get("policy_kw", {})}
+            sched, _ = scheduler.select_schedule(ctx, **kw)
+            return sched
+        return scheduler.get_policy(policy, **policy_kw).schedule(ctx)
+
+    def autoplan(self, max_new_tokens: int = 32, units: int = 1,
+                 **select_kw) -> "tuple[BatchSchedule, dict]":
+        """``plan(policy="auto")`` with the full pricing report: every
+        (policy × partition) candidate priced by the analytical closed
+        form, plus the chosen candidate's metrics under ``"chosen"``."""
+        from repro.serving import scheduler
+        return scheduler.select_schedule(
+            self._policy_context(max_new_tokens, units), **select_kw)
 
     def evaluate_schedule(self, backend_name: str = "desim",
                           max_new_tokens: int = 32, operands=None,
-                          units: Optional[int] = None, **backend_kwargs):
+                          units: Optional[int] = None,
+                          policy: str = "full-prefill",
+                          workload: bool = True,
+                          **backend_kwargs):
         """Price the planned schedule on a modelling backend.
 
-        Lowers ``plan(max_new_tokens, units)`` through
+        Lowers ``plan(max_new_tokens, units, policy)`` through
         ``workload_to_graph`` at the backend's granularity/fusion policy
         and runs the graph — ``desim`` returns the per-resource timeline
         (and, given ``operands``, the executed numbers);
         ``desim-cluster`` with ``units=N`` prices the same schedule on N
-        matrix units contending for the shared loader.  Returns
+        matrix units contending for the shared loader, and
+        ``analytical`` with ``units=N`` prices it with the contention-
+        aware closed form without running the DES.  Cluster partition
+        defaults follow ``scheduler.backend_kwargs_for`` (the caller's
+        explicit ``strategy`` wins, else the schedule's auto-chosen one,
+        else ``unit-affinity`` when the policy emitted placement hints,
+        else ``output-tile`` — serving GEMMs are short and wide), so
+        this prices the same deployment ``price_steps`` does.  Returns
         ``(schedule, ExecResult)``; ``result.detail["workload"]``
-        carries the repeat-weighted whole-schedule cost dict.
+        carries the repeat-weighted whole-schedule cost dict
+        (``workload=False`` skips that second pricing pass — callers
+        that also run ``scheduler.price_steps`` already have it as the
+        per-step sum).
         """
         from repro import backend
+        from repro.serving.scheduler import backend_kwargs_for
         units = 1 if units is None else units
-        backend_kwargs["units"] = units
+        sched = self.plan(max_new_tokens, units=units, policy=policy)
+        backend_kwargs = backend_kwargs_for(sched, units=units,
+                                            **backend_kwargs)
         eng = backend.get(backend_name, **backend_kwargs)
         if not eng.models_time:
             raise ValueError(
                 f"backend {backend_name!r} executes but does not model "
                 "time; use 'desim' or 'analytical'")
-        sched = self.plan(max_new_tokens, units=units)
         graph = eng.lower(sched.layers)
         result = eng.run_graph(graph, operands)
-        result.detail["workload"] = eng.run_workload(sched.layers)
+        if workload:
+            result.detail["workload"] = eng.run_workload(sched.layers)
         return sched, result
 
     def run(self, max_new_tokens: int = 32, temperature: float = 0.0):

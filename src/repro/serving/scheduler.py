@@ -1,0 +1,473 @@
+"""Pluggable serving batching policies — the policy half of ``plan``.
+
+``ServingEngine.plan`` used to hard-code one batching policy (full
+prefill, then lockstep decode).  The paper attributes a large share of
+CUTEv2's end-to-end gain to *overlapped* matrix–vector execution exposed
+by the asynchronous abstraction; at serving scale that overlap is a
+scheduling decision — when a request's prefill chunks run relative to
+the decode iterations already in flight.  This module makes that
+decision pluggable:
+
+* :class:`SchedulingPolicy` — the protocol: ``schedule(PolicyContext)``
+  lowers the pending queue into a
+  :class:`~repro.serving.engine.BatchSchedule`.
+* a registry (``register_policy`` / ``get_policy``) with three built-in
+  policies:
+
+  ===================  ====================================================
+  ``full-prefill``     today's behaviour, bit-identical schedules: per
+                       padded batch, one whole-prompt prefill step then
+                       all decode steps lockstep.  Best per-token cadence,
+                       worst queueing — a later batch waits for every
+                       earlier batch's complete drain.
+  ``chunked-prefill``  Sarathi-style: the prompt is split into
+                       ``chunk_tokens``-token chunks and in-flight decode
+                       iterations *piggyback* on each chunk (one mixed
+                       step), so prefill of batch *i+1* overlaps decode of
+                       batch *i*.  Throughput-oriented; decode tokens
+                       surface once per chunk.
+  ``decode-priority``  decode steps preempt prefill chunks at layer
+                       granularity: each scheduling round runs one merged
+                       decode iteration of everything in flight *before*
+                       the next prefill chunk, and the drain is a fair
+                       round-robin across batches — decode first-token
+                       latency is bounded by chunks-per-prefill rather
+                       than whole earlier drains.  On a cluster it pins
+                       decode steps to unit 0 via affinity hints (list
+                       the fastest unit first in a heterogeneous
+                       topology).
+  ===================  ====================================================
+
+Every policy lowers to the same ``BatchSchedule`` → ``workload_to_graph``
+path, so any policy is priceable on ``desim`` / ``desim-cluster``
+timelines, priced by the contention-aware ``analytical`` closed form
+without running the DES, and executed bit-exactly on the ``jax``
+backend.  :func:`decode_latency_stats` turns per-step prices into the
+serving metrics (decode first-token p50/p99 from queue time, inter-token
+latency) and :func:`select_schedule` auto-picks the best
+(policy × partition) candidate — ``plan(policy="auto")``.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import math
+from typing import Optional
+
+
+# ---------------------------------------------------------------------------
+# Context + registry.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PolicyContext:
+    """Everything a batching policy may look at: the queue (per-request
+    prompt lengths, in submission order), the engine's batching limit,
+    the decode horizon, and the cluster width the schedule targets."""
+
+    cfg: object                       # models.base.ArchConfig
+    prompt_lengths: "tuple[int, ...]"
+    max_batch: int
+    max_new_tokens: int
+    units: int = 1
+
+    @property
+    def n_layers(self) -> int:
+        return self.cfg.n_layers
+
+    def batches(self) -> "list[tuple[tuple[int, ...], int]]":
+        """Padded batch chunks in queue order: ``[(request ids, S_padded)]``
+        — the same chunking every policy (and the pre-refactor ``plan``)
+        uses, so policies differ only in *when* steps run."""
+        out = []
+        lengths = list(self.prompt_lengths)
+        first = 0
+        while lengths:
+            chunk, lengths = (lengths[: self.max_batch],
+                              lengths[self.max_batch:])
+            ids = tuple(range(first, first + len(chunk)))
+            first += len(chunk)
+            out.append((ids, max(chunk)))
+        return out
+
+
+POLICIES: "dict[str, type]" = {}
+
+
+def register_policy(cls):
+    """Class decorator: add a :class:`SchedulingPolicy` to the registry
+    under its ``name``."""
+    name = cls.name
+    prev = POLICIES.get(name)
+    if prev is not None and prev is not cls:
+        raise ValueError(f"policy {name!r} already registered by "
+                         f"{prev.__name__}")
+    POLICIES[name] = cls
+    return cls
+
+
+def available_policies() -> "tuple[str, ...]":
+    return tuple(POLICIES)
+
+
+def get_policy(name: str, **kw) -> "SchedulingPolicy":
+    try:
+        cls = POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown scheduling policy {name!r}; one of "
+                       f"{sorted(POLICIES)} (or 'auto')") from None
+    return cls(**kw)
+
+
+class SchedulingPolicy(abc.ABC):
+    """One batching policy: queue in, :class:`BatchSchedule` out."""
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def schedule(self, ctx: PolicyContext):
+        """Lower ``ctx`` into a BatchSchedule (policy/affinity fields
+        filled in)."""
+
+    # ----- shared lowering helpers -----------------------------------------
+    def _emit(self, steps, layers, ctx, kind, name, requests, tokens,
+              repeat, decode_requests=()):
+        from repro.serving.engine import BatchStep, _step_layer
+        steps.append(BatchStep(kind, tuple(requests), tokens=tokens,
+                               repeat=repeat,
+                               decode_requests=tuple(decode_requests)))
+        layers.append(_step_layer(ctx.cfg, name, tokens, repeat))
+
+    def _finish(self, steps, layers, ctx, affinity=None):
+        from repro.serving.engine import BatchSchedule
+        return BatchSchedule(steps, layers, units=ctx.units,
+                             policy=self.name,
+                             affinity=dict(affinity or {}))
+
+
+# ---------------------------------------------------------------------------
+# The three built-in policies.
+# ---------------------------------------------------------------------------
+
+@register_policy
+class FullPrefillPolicy(SchedulingPolicy):
+    """The pre-refactor ``ServingEngine.plan`` behaviour, verbatim: per
+    padded batch one prefill step over ``B × S_padded`` tokens, then all
+    ``max_new_tokens`` decode iterations collapsed into one lockstep
+    step.  Schedules are bit-identical to the old inline policy (pinned
+    by ``tests/test_scheduler.py``)."""
+
+    name = "full-prefill"
+
+    def schedule(self, ctx: PolicyContext):
+        steps, layers = [], []
+        for ci, (ids, s) in enumerate(ctx.batches()):
+            b = len(ids)
+            self._emit(steps, layers, ctx, "prefill", f"b{ci}/prefill",
+                       ids, tokens=b * s, repeat=ctx.n_layers)
+            self._emit(steps, layers, ctx, "decode", f"b{ci}/decode",
+                       ids, tokens=b,
+                       repeat=ctx.n_layers * ctx.max_new_tokens)
+        return self._finish(steps, layers, ctx)
+
+
+@dataclasses.dataclass
+class _InFlight:
+    ci: int
+    ids: "tuple[int, ...]"
+    left: int                        # decode iterations still owed
+
+
+class _ChunkingPolicy(SchedulingPolicy):
+    """Shared machinery for the chunk-interleaving policies."""
+
+    def __init__(self, chunk_tokens: int = 256):
+        if chunk_tokens < 1:
+            raise ValueError(f"chunk_tokens must be >= 1, "
+                             f"got {chunk_tokens}")
+        self.chunk_tokens = chunk_tokens
+
+    def _chunks(self, total: int) -> "list[int]":
+        n = max(1, math.ceil(total / self.chunk_tokens))
+        return [min(self.chunk_tokens, total - j * self.chunk_tokens)
+                for j in range(n)]
+
+    def _drain_round_robin(self, steps, layers, ctx, inflight):
+        """Fair round-robin drain of everything still owing decode
+        iterations, collapsed into one merged step per distinct horizon
+        (every in-flight batch advances one token per round)."""
+        while inflight:
+            m = min(d.left for d in inflight)
+            ids = tuple(i for d in inflight for i in d.ids)
+            tag = "+".join(f"b{d.ci}" for d in inflight)
+            self._emit(steps, layers, ctx, "decode", f"{tag}/decode.rr",
+                       ids, tokens=len(ids), repeat=ctx.n_layers * m,
+                       decode_requests=ids)
+            for d in inflight:
+                d.left -= m
+            inflight[:] = [d for d in inflight if d.left > 0]
+
+
+@register_policy
+class ChunkedPrefillPolicy(_ChunkingPolicy):
+    """Chunked prefill with piggybacked decode (Sarathi-style): each
+    scheduling step is one ``chunk_tokens`` slice of the current prompt
+    *plus* one decode iteration for every request already decoding — one
+    mixed batch through the model, so prefill of later batches overlaps
+    decode of earlier ones without dedicated decode slots."""
+
+    name = "chunked-prefill"
+
+    def schedule(self, ctx: PolicyContext):
+        steps, layers = [], []
+        inflight: "list[_InFlight]" = []
+        for ci, (ids, s) in enumerate(ctx.batches()):
+            b = len(ids)
+            for j, chunk in enumerate(self._chunks(b * s)):
+                riders = [d for d in inflight if d.left > 0]
+                rider_ids = tuple(i for d in riders for i in d.ids)
+                kind = "mixed" if riders else "prefill"
+                self._emit(
+                    steps, layers, ctx, kind,
+                    f"b{ci}/{kind}.c{j}", ids + rider_ids,
+                    tokens=chunk + len(rider_ids), repeat=ctx.n_layers,
+                    decode_requests=rider_ids)
+                for d in riders:
+                    d.left -= 1
+                inflight = [d for d in inflight if d.left > 0]
+            inflight.append(_InFlight(ci, ids, ctx.max_new_tokens))
+        self._drain_round_robin(steps, layers, ctx, inflight)
+        return self._finish(steps, layers, ctx)
+
+
+@register_policy
+class DecodePriorityPolicy(_ChunkingPolicy):
+    """Decode-priority interleaving: every scheduling round runs one
+    merged decode iteration of everything in flight *before* the next
+    prefill chunk — decode work preempts prefill at layer granularity
+    (a decode step's layers slot between the chunk's layers rather than
+    behind the whole prompt), so a request starts decoding as soon as
+    its own prefill lands instead of waiting out earlier batches'
+    drains.  On a cluster the policy hints the latency-critical decode
+    stream onto unit 0 for the ``unit-affinity`` partition strategy
+    (list the fastest unit first in a heterogeneous topology); prefill
+    GEMMs stay unhinted so the partitioner balances them over every
+    unit."""
+
+    name = "decode-priority"
+
+    def schedule(self, ctx: PolicyContext):
+        steps, layers = [], []
+        affinity: "dict[str, int]" = {}
+        inflight: "list[_InFlight]" = []
+        rr = 0
+
+        def emit_decode(name, rid, repeat):
+            self._emit(steps, layers, ctx, "decode", name, rid,
+                       tokens=len(rid), repeat=repeat,
+                       decode_requests=rid)
+            # the hint covers decode steps *competing* with prefill
+            # chunks; the tail drain (_drain_round_robin) has the
+            # cluster to itself and is left to the partitioner's
+            # balancer.
+            if ctx.units > 1:
+                affinity[name] = 0
+
+        for ci, (ids, s) in enumerate(ctx.batches()):
+            b = len(ids)
+            for j, chunk in enumerate(self._chunks(b * s)):
+                riders = [d for d in inflight if d.left > 0]
+                if riders:
+                    rid = tuple(i for d in riders for i in d.ids)
+                    emit_decode(f"dp{rr}/decode", rid, ctx.n_layers)
+                    rr += 1
+                    for d in riders:
+                        d.left -= 1
+                    inflight = [d for d in inflight if d.left > 0]
+                self._emit(steps, layers, ctx, "prefill",
+                           f"b{ci}/prefill.c{j}", ids, tokens=chunk,
+                           repeat=ctx.n_layers)
+            inflight.append(_InFlight(ci, ids, ctx.max_new_tokens))
+        self._drain_round_robin(steps, layers, ctx, inflight)
+        return self._finish(steps, layers, ctx, affinity)
+
+
+# ---------------------------------------------------------------------------
+# Pricing: per-step costs -> serving latency metrics.
+# ---------------------------------------------------------------------------
+
+def backend_kwargs_for(sched, default_strategy: str = "output-tile",
+                       **overrides) -> dict:
+    """Backend-constructor kwargs a schedule implies: its cluster width,
+    its auto-chosen partition strategy (or ``unit-affinity`` when the
+    policy emitted placement hints, else ``default_strategy`` —
+    serving GEMMs are short and wide, so ``output-tile`` shards the
+    dimension that actually spreads work).  Explicit ``overrides``
+    win."""
+    kw = dict(overrides)
+    if sched.units > 1:
+        kw.setdefault("units", sched.units)
+        strat = kw.setdefault("strategy", sched.strategy
+                              or ("unit-affinity" if sched.affinity
+                                  else default_strategy))
+        if strat == "unit-affinity" and sched.affinity:
+            kw.setdefault("affinity", dict(sched.affinity))
+    return kw
+
+
+def _price_workloads(sched, backend_name: str,
+                     **backend_kwargs) -> "list[dict]":
+    """Per-step ``run_workload`` dicts on a modelling backend (repeat
+    included) — one pricing pass feeding both the latency timeline and
+    the aggregate utilization."""
+    from repro import backend
+    eng = backend.get(backend_name,
+                      **backend_kwargs_for(sched, **backend_kwargs))
+    if not eng.models_time:
+        raise ValueError(f"backend {backend_name!r} does not model time")
+    return [eng.run_workload([lt]) for lt in sched.layers]
+
+
+def price_steps(sched, backend_name: str = "analytical",
+                **backend_kwargs) -> "list[float]":
+    """Cycles of each schedule step on a modelling backend (repeat
+    included) — the timeline ``decode_latency_stats`` consumes.  Cluster
+    backends (``units > 1``) price each step sharded across the
+    schedule's units; the contention-aware ``analytical`` form does so
+    without running the DES."""
+    return [w["cycles"]
+            for w in _price_workloads(sched, backend_name,
+                                      **backend_kwargs)]
+
+
+def _percentile(xs: "list[float]", q: float) -> float:
+    """Nearest-rank percentile (q in [0, 100]); 0.0 on empty input."""
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    rank = max(1, math.ceil(q / 100.0 * len(xs)))
+    return xs[min(rank, len(xs)) - 1]
+
+
+def decode_latency_stats(sched, step_cycles: "list[float]",
+                         n_layers: int) -> "dict[str, float]":
+    """Serving metrics from a priced schedule.
+
+    The queue is all present at plan time (t = 0), so a request's decode
+    tokens complete as the serial step timeline reaches them; a step
+    covering ``repeat / n_layers`` decode iterations emits its tokens
+    uniformly across its span.  Reported:
+
+    * ``decode_p50`` / ``decode_p99`` — per-request latency from queue
+      time to the *first* decode token (the decode-queueing delay a
+      batching policy controls; full prefill makes later batches wait
+      out every earlier drain).
+    * ``itl_p50`` / ``itl_p99`` — inter-token latency between successive
+      decode tokens of one request (the cadence cost of interleaving).
+    * ``makespan`` — total cycles of the serial step timeline.
+    """
+    if len(step_cycles) != len(sched.steps):
+        raise ValueError(f"{len(step_cycles)} step prices for "
+                         f"{len(sched.steps)} steps")
+    t = 0.0
+    first: "dict[int, float]" = {}
+    last: "dict[int, float]" = {}
+    itl: "list[float]" = []
+    for step, cyc in zip(sched.steps, step_cycles):
+        dr = step.decode_requests or (
+            step.requests if step.kind == "decode" else ())
+        if dr:
+            iters = max(1, round(step.repeat / n_layers))
+            for j in range(iters):
+                tok = t + cyc * (j + 1) / iters
+                for r in dr:
+                    if r in last:
+                        itl.append(tok - last[r])
+                    else:
+                        first[r] = tok
+                    last[r] = tok
+        t += cyc
+    lat = list(first.values())
+    return {
+        "makespan": t,
+        "decode_p50": _percentile(lat, 50.0),
+        "decode_p99": _percentile(lat, 99.0),
+        "itl_p50": _percentile(itl, 50.0),
+        "itl_p99": _percentile(itl, 99.0),
+        "decode_tokens": float(len(itl) + len(first)),
+    }
+
+
+def schedule_metrics(sched, n_layers: int,
+                     backend_name: str = "analytical",
+                     **backend_kwargs) -> "dict[str, float]":
+    """One-call pricing: per-step costs + latency stats + aggregate
+    matrix utilization of the whole schedule on ``backend_name`` — one
+    ``run_workload`` pass per step, shared by both."""
+    works = _price_workloads(sched, backend_name, **backend_kwargs)
+    cycles = [w["cycles"] for w in works]
+    stats = decode_latency_stats(sched, cycles, n_layers)
+    total = sum(cycles)
+    # the single-unit simulate_workload reports busy matrix cycles, the
+    # cluster forms report per-layer utilization directly; either way
+    # the schedule aggregate is the cycle-weighted mean.
+    busy = sum(w.get("matrix_utilization",
+                     w["matrix"] / c if c else 0.0) * c
+               for w, c in zip(works, cycles))
+    stats["matrix_utilization"] = busy / total if total else 0.0
+    stats["workload_cycles"] = total
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Auto-selection: price (policy x partition) candidates, pick the best.
+# ---------------------------------------------------------------------------
+
+def select_schedule(ctx: PolicyContext, *,
+                    backend_name: str = "analytical",
+                    objective: str = "decode_p50",
+                    makespan_slack: float = 0.05,
+                    policies: "Optional[list[str]]" = None,
+                    strategies: "Optional[list[str]]" = None,
+                    policy_kw: "Optional[dict]" = None,
+                    **backend_kwargs):
+    """Price every (policy × partition strategy) candidate with the
+    closed-form ``analytical`` backend (no DES run) and return
+    ``(best BatchSchedule, report)``.
+
+    Objective: minimise ``objective`` (a :func:`decode_latency_stats`
+    key) among candidates whose makespan is within ``makespan_slack`` of
+    the fastest candidate — latency policies may not buy their p50 with
+    unbounded throughput loss.  ``policy_kw`` (e.g. ``chunk_tokens``)
+    is forwarded to every candidate policy that accepts it.  ``report``
+    maps candidate keys to their metric dicts (the chosen one under
+    ``"chosen"``).
+    """
+    names = list(policies or POLICIES)
+    strats = list(strategies or
+                  (["output-tile", "unit-affinity"] if ctx.units > 1
+                   else [None]))
+    cands: "dict[str, tuple]" = {}
+    for pname in names:
+        try:
+            policy = get_policy(pname, **(policy_kw or {}))
+        except TypeError:          # e.g. chunk_tokens on full-prefill
+            policy = get_policy(pname)
+        base = policy.schedule(ctx)
+        for strat in strats:
+            sched = dataclasses.replace(base, strategy=strat)
+            kw = dict(backend_kwargs)
+            if ctx.units > 1:
+                kw["units"] = ctx.units
+            m = schedule_metrics(sched, ctx.n_layers, backend_name, **kw)
+            cands[f"{pname}" + (f"×{strat}" if strat else "")] = (sched, m)
+    best_makespan = min(m["makespan"] for _, m in cands.values())
+    feasible = {k: v for k, v in cands.items()
+                if v[1]["makespan"] <= (1 + makespan_slack) * best_makespan}
+    key = min(feasible, key=lambda k: (feasible[k][1][objective],
+                                       feasible[k][1]["makespan"]))
+    sched, metrics = feasible[key]
+    report = {k: m for k, (_, m) in cands.items()}
+    report["chosen"] = dict(metrics, candidate=key)
+    return sched, report

@@ -16,7 +16,8 @@ One ``TaskGraph`` IR (``sim.graph``) drives two consumers:
 
 from repro.sim.graph import (Granularity, Node, TaskGraph,
                              build_gemm_graph)
-from repro.sim.resources import BandwidthResource, ClusterTopology
+from repro.sim.resources import (BandwidthResource, ClusterTopology,
+                                 UnitSpec)
 from repro.sim.desim import (ClusterDESimResult, DESimResult, Machine,
                              build_cluster, simulate_cluster,
                              simulate_graph)
@@ -30,7 +31,7 @@ from repro.sim.trace import chrome_trace, dump_chrome_trace
 
 __all__ = [
     "Granularity", "Node", "TaskGraph", "build_gemm_graph",
-    "BandwidthResource", "ClusterTopology",
+    "BandwidthResource", "ClusterTopology", "UnitSpec",
     "ClusterDESimResult", "DESimResult", "Machine", "build_cluster",
     "simulate_cluster", "simulate_graph",
     "Partition", "STRATEGIES", "partition_graph",

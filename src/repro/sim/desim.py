@@ -183,14 +183,23 @@ def tile_chunks(unit: MatrixUnitConfig, platform: CpuPlatform, node: Node,
 
 @dataclasses.dataclass
 class UnitMachine:
-    """One matrix unit's private resources inside a cluster."""
+    """One matrix unit's private resources inside a cluster.
+
+    ``config`` is the unit's own :class:`MatrixUnitConfig` (heterogeneous
+    clusters mix them); ``private_loader`` is the unit's dedicated
+    bandwidth slice when the topology carves one out of the pool —
+    ``None`` means the unit's traffic contends on the shared loader.
+    """
 
     idx: int
     prefix: str                       # "" for a 1-unit cluster, "u0/" etc.
+    config: MatrixUnitConfig
     dispatcher: Resource
     banks: Resource
     pe: Resource
     vector: Resource
+    private_loader: Optional[BandwidthResource] = None
+    private_bpc: float = 0.0          # raw bytes/cycle of the private slice
 
     def resources(self) -> "list[Resource]":
         return [self.dispatcher, self.banks, self.pe, self.vector]
@@ -205,8 +214,9 @@ class ClusterMachine:
 
     @property
     def loader_bpc(self) -> float:
-        """Raw pooled loader bytes/cycle (derates are per-transfer)."""
-        return self.topology.loader_bandwidth / self.topology.unit.freq_hz
+        """Raw *contended-pool* loader bytes/cycle: the pooled bandwidth
+        minus private slices (derates are per-transfer)."""
+        return self.topology.shared_bandwidth / self.topology.unit.freq_hz
 
     @property
     def memory_node_bpc(self) -> float:
@@ -221,16 +231,23 @@ def unit_prefix(idx: int, n_units: int) -> str:
 
 def build_cluster(topology: ClusterTopology) -> ClusterMachine:
     loop = EventLoop()
+    freq = topology.unit.freq_hz
     units = []
     for i in range(topology.n_units):
         p = unit_prefix(i, topology.n_units)
+        cfg = topology.unit_config(i)
+        private = topology.private_bandwidth(i)
         units.append(UnitMachine(
-            idx=i, prefix=p,
+            idx=i, prefix=p, config=cfg,
             dispatcher=Resource(loop, p + "dispatcher"),
             banks=Resource(loop, p + "scratchpad",
-                           capacity=topology.unit.scratchpad_banks),
+                           capacity=cfg.scratchpad_banks),
             pe=Resource(loop, p + "pe_array"),
-            vector=Resource(loop, p + "vector_unit")))
+            vector=Resource(loop, p + "vector_unit"),
+            private_loader=BandwidthResource(loop, p + "local_loader",
+                                             policy="fcfs")
+            if private > 0 else None,
+            private_bpc=private / freq))
     loader = BandwidthResource(loop, "mem_loader",
                                policy=topology.loader_policy)
     return ClusterMachine(loop=loop, topology=topology, units=units,
@@ -381,6 +398,9 @@ def simulate_cluster(graph: TaskGraph,
         for r in mu.resources():
             intervals[r.name] = r.intervals
             capacity[r.name] = r.capacity
+        if mu.private_loader is not None:
+            intervals[mu.private_loader.name] = mu.private_loader.intervals
+            capacity[mu.private_loader.name] = 1
     # Makespan from recorded activity, not the raw event-heap horizon:
     # the fair-share loader leaves superseded no-op wakeups in the heap.
     makespan = 0.0
@@ -390,8 +410,12 @@ def simulate_cluster(graph: TaskGraph,
         for _, e, _ in ivals:
             makespan = max(makespan, e)
 
+    # Ideal cycles are per-node against the *owning* unit's throughput —
+    # on a heterogeneous cluster a fast unit's tile has a smaller bound.
     unit = topology.unit
-    ideal = sum(n.task.macs / unit.macs_per_cycle(n.task.data_type)
+    ideal = sum(n.task.macs
+                / topology.unit_config(n.unit).macs_per_cycle(
+                    n.task.data_type)
                 for n in nodes if n.kind == "matmul")
     return ClusterDESimResult(
         cycles=makespan, ideal_matrix_cycles=ideal, node_span=span,
@@ -422,9 +446,14 @@ def _run_matmul(machine: ClusterMachine, mu: UnitMachine, node: Node,
     → done."""
     topo = machine.topology
     platform = topo.platform
-    unit = topo.unit
+    unit = mu.config                   # the owning unit's own geometry
     label = node.name
-    bpc = machine.loader_bpc
+    # A private bandwidth slice keeps this unit's tile traffic off the
+    # contended pool (cross-unit transfers still share — see `start`).
+    if mu.private_loader is not None:
+        loader, bpc = mu.private_loader, mu.private_bpc
+    else:
+        loader, bpc = machine.loader, machine.loader_bpc
     w = tile_work(unit, platform, node)
     if topo.k_stream:
         chunks = tile_chunks(unit, platform, node)
@@ -445,8 +474,8 @@ def _run_matmul(machine: ClusterMachine, mu: UnitMachine, node: Node,
         mu.banks.acquire(granted)
 
     def issue_load(j):
-        machine.loader.transfer(chunks[j][0] / bpc, label,
-                                then=lambda: chunk_loaded(j))
+        loader.transfer(chunks[j][0] / bpc, label,
+                        then=lambda: chunk_loaded(j))
 
     def chunk_loaded(j):
         loaded[j] = True
@@ -473,7 +502,7 @@ def _run_matmul(machine: ClusterMachine, mu: UnitMachine, node: Node,
         # A/B bank held from load start to compute end, then freed.
         mu.banks.intervals.append((bank_start[0], machine.loop.now, label))
         mu.banks.release()
-        machine.loader.transfer(w["wb_eff"] / bpc, label + "/wb")
+        loader.transfer(w["wb_eff"] / bpc, label + "/wb")
         # Result usable after the PE pipeline drains; the CPU then owes a
         # checkMatmul poll before dependents (vector epilogues) may issue.
         machine.loop.after(

@@ -337,36 +337,28 @@ def apply_graph_epilogues(graph: TaskGraph, acc: jax.Array, *,
     return out
 
 
-def cluster_workload(topology, layers: "list[LayerTrace]", *,
-                     strategy: str = "row-panel",
-                     fused: bool = True,
-                     granularity: Granularity = Granularity.TILE,
-                     ) -> "dict[str, float]":
-    """``desim_workload`` on a cluster: per layer, partition the graph
-    across the topology's units and simulate on the contended machine.
-    Same dict shape as ``simulate_workload`` plus cluster diagnostics."""
-    from repro.sim.desim import simulate_cluster, unit_prefix
-    from repro.sim.partition import partition_graph
+def aggregate_cluster_workload(topology, layers: "list[LayerTrace]",
+                               price_layer) -> "dict[str, float]":
+    """Assemble the cluster workload dict (``simulate_workload`` shape
+    plus cluster diagnostics) from any per-layer pricer.
+
+    ``price_layer(layer)`` returns one *instance*'s
+    ``{cycles, matrix, vector, ideal, loader_busy, transfers}``; repeat
+    weighting and the utilization/seconds/flops tail live here so the
+    DES pricer (:func:`cluster_workload`) and the analytical closed
+    form agree on the aggregation by construction."""
     tot = {"cycles": 0.0, "matrix": 0.0, "vector": 0.0}
     ideal = 0.0
     loader_busy = 0.0
     transfers = 0
     for layer in layers:
-        graph, _ = layer_to_graph(topology.unit, layer, fused=fused,
-                                  granularity=granularity,
-                                  platform=topology.platform)
-        part = partition_graph(graph, topology.n_units, strategy)
-        r = simulate_cluster(part.graph, topology)
-        pe = sum(r.busy(unit_prefix(i, r.n_units) + "pe_array")
-                 for i in range(r.n_units))
-        vec = sum(r.busy(unit_prefix(i, r.n_units) + "vector_unit")
-                  for i in range(r.n_units))
-        tot["cycles"] += r.cycles * layer.repeat
-        tot["matrix"] += pe * layer.repeat
-        tot["vector"] += vec * layer.repeat
-        ideal += r.ideal_matrix_cycles * layer.repeat
-        loader_busy += r.loader_busy * layer.repeat
-        transfers += part.n_transfers
+        r = price_layer(layer)
+        tot["cycles"] += r["cycles"] * layer.repeat
+        tot["matrix"] += r["matrix"] * layer.repeat
+        tot["vector"] += r["vector"] * layer.repeat
+        ideal += r["ideal"] * layer.repeat
+        loader_busy += r["loader_busy"] * layer.repeat
+        transfers += r["transfers"]
     tot["seconds"] = tot["cycles"] / topology.unit.freq_hz
     tot["flops"] = sum(l.flops() for l in layers)
     tot["matrix_utilization"] = (
@@ -375,6 +367,43 @@ def cluster_workload(topology, layers: "list[LayerTrace]", *,
                                  if tot["cycles"] else 0.0)
     tot["transfers"] = float(transfers)
     return tot
+
+
+def cluster_workload(topology, layers: "list[LayerTrace]", *,
+                     strategy: str = "row-panel",
+                     fused: bool = True,
+                     granularity: Granularity = Granularity.TILE,
+                     affinity: "dict[str, int] | None" = None,
+                     weights: "list[float] | None" = None,
+                     ) -> "dict[str, float]":
+    """``desim_workload`` on a cluster: per layer, partition the graph
+    across the topology's units and simulate on the contended machine.
+    ``affinity``/``weights`` reach the partitioner (the
+    ``unit-affinity`` strategy), so workload pricing shards exactly
+    like ``run_graph`` on the same backend."""
+    from repro.sim.desim import simulate_cluster, unit_prefix
+    from repro.sim.partition import partition_graph
+
+    def price_layer(layer):
+        graph, _ = layer_to_graph(topology.unit, layer, fused=fused,
+                                  granularity=granularity,
+                                  platform=topology.platform)
+        part = partition_graph(graph, topology.n_units, strategy,
+                               affinity=affinity, weights=weights)
+        r = simulate_cluster(part.graph, topology)
+        return {
+            "cycles": r.cycles,
+            "matrix": sum(r.busy(unit_prefix(i, r.n_units) + "pe_array")
+                          for i in range(r.n_units)),
+            "vector": sum(r.busy(unit_prefix(i, r.n_units)
+                                 + "vector_unit")
+                          for i in range(r.n_units)),
+            "ideal": r.ideal_matrix_cycles,
+            "loader_busy": r.loader_busy,
+            "transfers": part.n_transfers,
+        }
+
+    return aggregate_cluster_workload(topology, layers, price_layer)
 
 
 def gemm_labels(graph: TaskGraph) -> "list[str]":

@@ -15,6 +15,13 @@ bytes.  Three strategies, the classic GEMM-sharding axes:
   epilogues force gather transfers.
 * ``layer-pipeline`` — whole GEMMs round-robin across units; inter-layer
   activations cross units as transfers, the pipeline-parallel layout.
+* ``unit-affinity`` — whole GEMMs placed by a serving policy's
+  per-request affinity hints (``affinity={layer or GEMM label: unit}``),
+  with unhinted GEMMs balanced greedily onto the least-loaded unit
+  under per-unit ``weights`` (relative throughput — heterogeneous
+  clusters want MACs routed in proportion to PE width, not round-robin).
+  The co-optimisation seam between ``serving.scheduler`` batching
+  policies and shard placement.
 
 Why transfers are charged the way they are: in this machine model every
 tile load/writeback already moves through shared DRAM, so a same-unit
@@ -40,12 +47,13 @@ from typing import Optional
 
 from repro.sim.graph import Node, TaskGraph
 
-STRATEGIES = ("row-panel", "output-tile", "layer-pipeline")
+STRATEGIES = ("row-panel", "output-tile", "layer-pipeline",
+              "unit-affinity")
 
 #: strategy -> GEMM dimension it shards (None: whole GEMMs per unit).
 #: The simulation and execution halves must agree on this axis.
 STRATEGY_DIM = {"row-panel": "m", "output-tile": "n",
-                "layer-pipeline": None}
+                "layer-pipeline": None, "unit-affinity": None}
 
 #: accumulator bytes per output element (resident C is fp32/int32).
 ACC_BYTES = 4.0
@@ -95,12 +103,61 @@ def _matmul_area(graph: TaskGraph, node: Node) -> float:
     return area
 
 
+def _affinity_placement(label_order: "list[str]",
+                        by_label: "dict[str, list[Node]]",
+                        n_units: int,
+                        affinity: "dict[str, int] | None",
+                        weights: "list[float] | None",
+                        ) -> "dict[str, int]":
+    """Whole-GEMM placement for ``unit-affinity``: honour hints first,
+    then greedily put each unhinted GEMM on the unit with the lowest
+    *normalised* load (cumulative MACs / throughput weight)."""
+    affinity = affinity or {}
+    if weights is None:
+        weights = [1.0] * n_units
+    if len(weights) != n_units or any(w <= 0 for w in weights):
+        raise ValueError(
+            f"weights must be {n_units} positive per-unit throughputs; "
+            f"got {weights}")
+    load = [0.0] * n_units
+
+    def hint_for(lbl: str):
+        # a hint may name the GEMM label ("step/g2") or its whole
+        # layer/step ("step" — what a serving policy emits per step).
+        if lbl in affinity:
+            return affinity[lbl]
+        head = lbl.rsplit("/g", 1)[0]
+        return affinity.get(head)
+
+    placement: "dict[str, int]" = {}
+    for lbl in label_order:
+        macs = sum(t.task.macs for t in by_label[lbl])
+        hint = hint_for(lbl)
+        if hint is not None:
+            if not 0 <= hint < n_units:
+                raise ValueError(
+                    f"affinity hint {hint} for {lbl!r} out of range for "
+                    f"{n_units} unit(s)")
+            u = hint
+        else:
+            u = min(range(n_units),
+                    key=lambda i: ((load[i] + macs) / weights[i], i))
+        placement[lbl] = u
+        load[u] += macs
+    return placement
+
+
 def partition_graph(graph: TaskGraph, n_units: int,
-                    strategy: str = "row-panel") -> Partition:
+                    strategy: str = "row-panel", *,
+                    affinity: "dict[str, int] | None" = None,
+                    weights: "list[float] | None" = None) -> Partition:
     """Rewrite ``graph`` with per-node unit placements + transfer nodes.
 
     ``n_units == 1`` returns a copy with everything on unit 0 and no
-    transfers (the degenerate cluster).
+    transfers (the degenerate cluster).  ``affinity``/``weights`` feed
+    the ``unit-affinity`` strategy (and are ignored by the others):
+    per-label placement hints from a serving policy, and relative
+    per-unit throughputs for balancing the rest.
     """
     if strategy not in STRATEGIES:
         raise ValueError(
@@ -115,7 +172,12 @@ def partition_graph(graph: TaskGraph, n_units: int,
         if n.kind == "matmul":
             by_label.setdefault(n.layer, []).append(n)
     label_order = list(by_label)
-    unit_of_label = {lbl: i % n_units for i, lbl in enumerate(label_order)}
+    if strategy == "unit-affinity":
+        unit_of_label = _affinity_placement(label_order, by_label, n_units,
+                                            affinity, weights)
+    else:
+        unit_of_label = {lbl: i % n_units
+                         for i, lbl in enumerate(label_order)}
 
     panel_unit: "dict[str, dict[int, int]]" = {}   # label -> {m0/n0 -> unit}
     spans: "dict[str, list[Optional[tuple[int, int]]]]" = {}
@@ -140,7 +202,7 @@ def partition_graph(graph: TaskGraph, n_units: int,
             spans[lbl] = per_unit
 
     def assign(node: Node) -> int:
-        if strategy == "layer-pipeline":
+        if STRATEGY_DIM[strategy] is None:     # whole-GEMM placements
             return unit_of_label[node.layer]
         key = node.tile.m0 if strategy == "row-panel" else node.tile.n0
         return panel_unit[node.layer][key]

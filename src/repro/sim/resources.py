@@ -285,17 +285,53 @@ class BandwidthResource:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class UnitSpec:
+    """One matrix unit's slot in a (possibly heterogeneous) cluster.
+
+    ``unit`` is the full :class:`~repro.core.config.MatrixUnitConfig`
+    (PE array shape, scratchpad extents and bank count, memory channel),
+    so per-unit PE throughput and scratchpad capacity are just distinct
+    configs.  ``private_bandwidth`` carves a NUMA-ish dedicated slice out
+    of the pooled loader bandwidth: the unit's own tile loads/writebacks
+    stream through that slice uncontended while cross-unit transfers and
+    bulk memory nodes (and every unit without a slice) share the
+    remainder of the pool.
+    """
+
+    unit: object = None               # MatrixUnitConfig (default CASE_STUDY)
+    private_bandwidth: float = 0.0    # bytes/s carved out of the pool
+
+    def __post_init__(self):
+        if self.unit is None:
+            from repro.core.config import CASE_STUDY
+            object.__setattr__(self, "unit", CASE_STUDY)
+        if self.private_bandwidth < 0:
+            raise ValueError(
+                f"private_bandwidth must be >= 0, got "
+                f"{self.private_bandwidth}")
+
+
+@dataclasses.dataclass(frozen=True)
 class ClusterTopology:
     """The machine a multi-unit deployment implies (scale-out mirror of
-    ``MatrixUnitConfig``): ``n_units`` identical matrix units, each with
-    a private dispatcher, scratchpad banks, PE array and vector unit,
-    all loading through one shared memory loader.
+    ``MatrixUnitConfig``): ``n_units`` matrix units, each with a private
+    dispatcher, scratchpad banks, PE array and vector unit, all loading
+    through one shared memory loader.
+
+    Homogeneous clusters pass ``n_units`` + one ``unit`` config (the
+    classic form); heterogeneous clusters pass ``unit_specs`` — a list
+    of :class:`UnitSpec` (or bare ``MatrixUnitConfig``) entries with
+    distinct PE throughput / scratchpad / private-bandwidth slices.
+    All units must share one clock (``freq_hz``) so cycle counts remain
+    a common currency across the cluster.
 
     ``total_bandwidth`` is the pooled loader bandwidth.  The default
     (``None``) assumes every unit brings its own memory channel into the
-    pool — ``n_units × unit.bandwidth`` — so weak scaling is limited by
+    pool — ``Σ unit.bandwidth`` — so weak scaling is limited by
     *contention/interleaving*, not raw starvation; pass a fixed value to
-    study where the shared loader saturates.
+    study where the shared loader saturates.  Private slices
+    (``UnitSpec.private_bandwidth``) are carved out of that pool; the
+    remainder (:attr:`shared_bandwidth`) is what contended traffic sees.
 
     ``k_stream`` enables K-chunked scratchpad streaming (``k_scp``
     granularity): a tile's loads arrive chunk by chunk and its compute
@@ -310,8 +346,23 @@ class ClusterTopology:
     loader_policy: str = "fair"       # "fair" | "fcfs"
     total_bandwidth: Optional[float] = None
     k_stream: bool = True
+    unit_specs: "Optional[tuple]" = None   # heterogeneous per-unit specs
 
     def __post_init__(self):
+        if self.unit_specs is not None:
+            specs = tuple(s if isinstance(s, UnitSpec) else UnitSpec(unit=s)
+                          for s in self.unit_specs)
+            if not specs:
+                raise ValueError("unit_specs must name at least one unit")
+            # n_units left at its default follows the spec list; an
+            # explicit mismatching width is a caller bug.
+            if self.n_units not in (1, len(specs)):
+                raise ValueError(
+                    f"n_units={self.n_units} but unit_specs has "
+                    f"{len(specs)} entries")
+            object.__setattr__(self, "unit_specs", specs)
+            object.__setattr__(self, "n_units", len(specs))
+            object.__setattr__(self, "unit", self.unit or specs[0].unit)
         if self.n_units < 1:
             raise ValueError(f"n_units must be >= 1, got {self.n_units}")
         if self.loader_policy not in ("fair", "fcfs"):
@@ -324,19 +375,71 @@ class ClusterTopology:
             object.__setattr__(self, "unit", self.unit or CASE_STUDY)
             object.__setattr__(self, "platform", self.platform or SHUTTLE)
             object.__setattr__(self, "vector", self.vector or SATURN_512)
+        freqs = {self.unit_config(i).freq_hz for i in range(self.n_units)}
+        if len(freqs) > 1:
+            raise ValueError(
+                f"units must share one clock; got freq_hz={sorted(freqs)}")
+        if self.private_total > 0 and self.shared_bandwidth <= 0:
+            raise ValueError(
+                f"private slices ({self.private_total:.3g} B/s) consume "
+                f"the whole pool ({self.loader_bandwidth:.3g} B/s); "
+                "shrink them or raise total_bandwidth")
 
+    # ----- per-unit accessors ---------------------------------------------
+    @property
+    def heterogeneous(self) -> bool:
+        return self.unit_specs is not None
+
+    def spec(self, i: int) -> UnitSpec:
+        if self.unit_specs is not None:
+            return self.unit_specs[i]
+        return UnitSpec(unit=self.unit)
+
+    def unit_config(self, i: int):
+        return self.spec(i).unit
+
+    def private_bandwidth(self, i: int) -> float:
+        return self.spec(i).private_bandwidth
+
+    @property
+    def private_total(self) -> float:
+        return sum(self.private_bandwidth(i) for i in range(self.n_units))
+
+    def throughput_weights(self, data_type=None) -> "list[float]":
+        """Relative per-unit MAC throughput — the balance weights a
+        heterogeneity-aware partitioner (``unit-affinity``) uses."""
+        from repro.core.precision import DataType
+        dt = data_type or DataType.INT8
+        return [float(self.unit_config(i).macs_per_cycle(dt))
+                for i in range(self.n_units)]
+
+    # ----- bandwidth accounting -------------------------------------------
     @property
     def loader_bandwidth(self) -> float:
         if self.total_bandwidth is not None:
             return self.total_bandwidth
-        return self.n_units * self.unit.bandwidth
+        return sum(self.unit_config(i).bandwidth
+                   for i in range(self.n_units))
+
+    @property
+    def shared_bandwidth(self) -> float:
+        """Pool left for contended traffic after private slices."""
+        return self.loader_bandwidth - self.private_total
 
     def with_(self, **kw) -> "ClusterTopology":
         return dataclasses.replace(self, **kw)
 
     def describe(self) -> str:
         from repro.core.hardware import GIGA
-        return (f"{self.n_units} unit(s) x [{self.unit.describe()}], "
-                f"shared loader {self.loader_bandwidth / GIGA:.0f} GB/s "
+        if self.heterogeneous:
+            units = " + ".join(
+                f"[{s.unit.describe()}"
+                + (f", {s.private_bandwidth / GIGA:.0f} GB/s private]"
+                   if s.private_bandwidth else "]")
+                for s in self.unit_specs)
+        else:
+            units = f"{self.n_units} unit(s) x [{self.unit.describe()}]"
+        return (f"{units}, shared loader "
+                f"{self.shared_bandwidth / GIGA:.0f} GB/s "
                 f"({self.loader_policy})"
                 + (", k-stream" if self.k_stream else ""))

@@ -9,17 +9,50 @@ resources ``u<i>/<resource>``; the exporter splits that prefix into the
 process so each unit renders as its own track group instead of
 interleaving on one row.  Overlapping events on the shared loader row
 are the fair-share contention, made visible.
+
+Serving-schedule graphs carry their batching policy's phase in the node
+labels (``b0/prefill.c2/...``, ``dp3/decode/...``): the exporter
+annotates each slice with ``args.phase`` (``prefill`` / ``prefill-chunk``
+/ ``decode`` / ``mixed``) and a matching Perfetto colour, so a
+``chunked-prefill`` or ``decode-priority`` timeline shows exactly where
+decode iterations preempt prefill chunks.
 """
 
 from __future__ import annotations
 
 import json
+import re
 
 from repro.sim.desim import DESimResult
 
 #: stable row order in the viewer, dispatcher (the cause) on top.
 _RESOURCE_ORDER = ("dispatcher", "mem_loader", "scratchpad", "pe_array",
                    "vector_unit")
+
+#: serving-policy phase of an event label; chunked prefill steps are
+#: named ``.../prefill.c<j>/...`` by ``serving.scheduler``.
+_PHASE_RE = re.compile(r"(?:^|/)(prefill|decode|mixed)(\.[^/]*)?(?:/|$)")
+
+#: Perfetto reserved colour names per phase — decode pops against the
+#: prefill stream at a glance.
+_PHASE_COLOR = {"prefill": "thread_state_running",
+                "prefill-chunk": "thread_state_runnable",
+                "decode": "thread_state_iowait",
+                "mixed": "thread_state_unknown"}
+
+
+def phase_of(label: str) -> "str | None":
+    """Serving-policy phase of a node/interval label, or ``None`` for
+    non-schedule work (bare GEMM tiles, transfers): ``prefill`` /
+    ``prefill-chunk`` (a chunked-prefill slice) / ``decode`` /
+    ``mixed`` (decode iterations piggybacked on a prefill chunk)."""
+    m = _PHASE_RE.search(label)
+    if m is None:
+        return None
+    kind, suffix = m.group(1), m.group(2)
+    if kind == "prefill" and suffix:
+        return "prefill-chunk"
+    return kind
 
 
 def _split(resource: str) -> "tuple[int, str]":
@@ -57,12 +90,17 @@ def chrome_trace(result: DESimResult, *, process_name: str = "cutev2-desim",
         events.append({"name": "thread_name", "ph": "M", "pid": pid,
                        "tid": tid, "args": {"name": thread}})
         for start, end, label in result.intervals[rname]:
-            events.append({
+            ev = {
                 "name": label, "cat": rname, "ph": "X", "pid": pid,
                 "tid": tid,
                 "ts": start * us_per_cycle,
                 "dur": max(end - start, 0.0) * us_per_cycle,
-            })
+            }
+            phase = phase_of(label)
+            if phase is not None:
+                ev["args"] = {"phase": phase}
+                ev["cname"] = _PHASE_COLOR[phase]
+            events.append(ev)
     other = {
         "total_cycles": result.cycles,
         "matrix_utilization": result.matrix_utilization,

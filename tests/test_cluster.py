@@ -342,10 +342,13 @@ class TestRegistryHygiene:
         assert type(backend.get("desim")) is orig
 
     def test_single_unit_backends_reject_units(self):
-        for name in ("jax", "pallas", "desim", "analytical"):
+        for name in ("jax", "pallas", "desim"):
             with pytest.raises(ValueError, match="single matrix unit"):
                 backend.get(name, units=4)
             assert backend.get(name, units=1) is not None
+        # analytical joined the cluster-aware set in PR 4: units=N
+        # switches it to the contention-aware closed form.
+        assert backend.get("analytical", units=4).supports_units
 
 
 # ---------------------------------------------------------------------------
