@@ -353,10 +353,11 @@ def bench_cluster():
 # ---------------------------------------------------------------------------
 
 def bench_serving():
-    """Decode first-token p50/p99 + aggregate matrix utilization per
-    batching policy on a Llama-style config (yi-6b reduced, 6 requests),
-    priced by the contention-aware analytical closed form — single unit
-    and the ``--units`` cluster (default 2)."""
+    """TTFT p50/p99 + inter-token latency + aggregate matrix utilization
+    per batching policy on a Llama-style config (yi-6b reduced, 6
+    requests), priced by the contention-aware analytical closed form —
+    single unit and the ``--units`` cluster (default 2), with both
+    chained and relaxed-overlap lowerings on the cluster point."""
     import jax
     from repro.configs.registry import get_config
     from repro.serving.engine import ServingEngine
@@ -376,18 +377,28 @@ def bench_serving():
     policies = [POLICY] if POLICY else list(available_policies()) + ["auto"]
     for pol in policies:
         for u in sweep:
-            def run(pol=pol, u=u):
-                sched = eng.plan(max_new_tokens=16, units=u, policy=pol)
-                return sched, schedule_metrics(sched, cfg.n_layers,
-                                               "analytical")
+            # chained on one unit (relaxed buys nothing there); both
+            # lowerings on the cluster point.  "auto" sweeps internally.
+            overlaps = ("chained",) if (u == 1 or pol == "auto") \
+                else ("chained", "relaxed")
+            for ov in overlaps:
+                def run(pol=pol, u=u, ov=ov):
+                    sched = eng.plan(max_new_tokens=16, units=u,
+                                     policy=pol, overlap=ov)
+                    return sched, schedule_metrics(sched, cfg.n_layers,
+                                                   "analytical")
 
-            (sched, m), us = timed(run)
-            emit(f"serving_{pol}_u{u}", us,
-                 f"policy={sched.policy} decode_p50={m['decode_p50']:.0f} "
-                 f"decode_p99={m['decode_p99']:.0f} "
-                 f"itl_p50={m['itl_p50']:.0f} "
-                 f"agg_matrix_util={m['matrix_utilization']:.3f} "
-                 f"makespan={m['makespan']:.0f}")
+                (sched, m), us = timed(run)
+                tag = f"serving_{pol}_u{u}" + \
+                    ("_relaxed" if ov == "relaxed" else "")
+                emit(tag, us,
+                     f"policy={sched.policy} "
+                     f"overlap={sched.overlap} "
+                     f"ttft_p50={m['ttft_p50']:.0f} "
+                     f"ttft_p99={m['ttft_p99']:.0f} "
+                     f"itl_p50={m['itl_p50']:.0f} "
+                     f"agg_matrix_util={m['matrix_utilization']:.3f} "
+                     f"makespan={m['makespan']:.0f}")
 
 
 # ---------------------------------------------------------------------------

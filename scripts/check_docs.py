@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Docs CI: markdown link check + doctest of runnable snippets.
+
+Usage (what the CI docs job runs)::
+
+    PYTHONPATH=src python scripts/check_docs.py
+
+* **Link check** — every relative markdown link / image in README.md,
+  ROADMAP.md and docs/*.md must resolve to an existing file (anchors
+  are stripped; ``http(s)://`` and ``mailto:`` links are skipped —
+  no network in CI).
+* **Doctest** — every ``>>>`` example in docs/*.md runs via
+  :mod:`doctest`, so the documented snippets cannot rot away from the
+  code.  stdlib only; exit status is non-zero on any failure.
+"""
+
+from __future__ import annotations
+
+import doctest
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+#: inline markdown links/images: [text](target) — (nested parens not used
+#: in this repo's docs).
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP = ("http://", "https://", "mailto:")
+
+
+def check_links(paths: "list[pathlib.Path]") -> "list[str]":
+    errors = []
+    for path in paths:
+        text = path.read_text()
+        # fenced code blocks may contain ](...)-shaped noise; drop them.
+        prose = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(prose):
+            target = m.group(1).split("#", 1)[0]
+            if not target or target.startswith(_SKIP):
+                continue
+            resolved = (path.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"{path.relative_to(ROOT)}: broken link "
+                              f"-> {m.group(1)}")
+    return errors
+
+
+def run_doctests(paths: "list[pathlib.Path]") -> "list[str]":
+    errors = []
+    for path in paths:
+        fails, tests = doctest.testfile(str(path), module_relative=False,
+                                        optionflags=doctest.ELLIPSIS)
+        label = path.relative_to(ROOT)
+        print(f"doctest {label}: {tests} examples, {fails} failures")
+        if fails:
+            errors.append(f"{label}: {fails} doctest failure(s)")
+    return errors
+
+
+def main() -> int:
+    md = [ROOT / "README.md", ROOT / "ROADMAP.md"]
+    docs = sorted((ROOT / "docs").glob("*.md"))
+    if not docs:
+        print("no docs/*.md found", file=sys.stderr)
+        return 1
+    errors = check_links(md + docs)
+    print(f"link check: {len(md + docs)} files, {len(errors)} broken")
+    errors += run_doctests(docs)
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,7 +32,6 @@ answers "how long", not "what".
 
 from __future__ import annotations
 
-import re
 from typing import Callable
 
 from repro.backend.base import ExecResult, GraphOperands, MatMulOperands
@@ -40,8 +39,7 @@ from repro.backend.cluster_backend import PartitionedBackend
 from repro.backend.registry import register
 from repro.core.fusion import Epilogue, NO_EPILOGUE
 from repro.core.task import MatMulTask
-
-_GEMM_SUFFIX = re.compile(r"/g\d+$")
+from repro.sim.lower import step_label
 
 #: fixed-point sweeps for the shared-loader slowdown (converges in 2-3).
 _CONTENTION_ITERS = 6
@@ -53,8 +51,19 @@ class AnalyticalBackend(PartitionedBackend):
 
     models_time = True
 
-    def __init__(self, units: int = 1, strategy: str = "row-panel", **kw):
-        super().__init__(units=units, strategy=strategy, **kw)
+    def __init__(self, units: int = 1, strategy: str = "row-panel",
+                 k_stream: "bool | None" = None, **kw):
+        """``k_stream=None`` resolves per form: the cluster closed form
+        is chunk-aware (matches ``desim-cluster``'s default K-streamed
+        machine), while the single-unit form defaults off so the ~1%
+        parity pins against the classic whole-tile-fill ``simulate_graph``
+        hold unchanged.  Pass ``k_stream=True`` with ``units=1`` to fold
+        the first-chunk fill term into the single-unit closed form
+        (parity vs the K-streamed 1-unit DES is pinned ≤5%)."""
+        if k_stream is None:
+            k_stream = units != 1 or kw.get("topology") is not None
+        super().__init__(units=units, strategy=strategy,
+                         k_stream=k_stream, **kw)
 
     @property
     def _cluster(self) -> bool:
@@ -83,21 +92,24 @@ class AnalyticalBackend(PartitionedBackend):
         """
         if self._cluster:
             return self._run_graph_cluster(graph)
-        from repro.sim.desim import build_machine, tile_costs
+        from repro.sim.desim import build_machine, tile_chunks, tile_costs
         machine = build_machine(self.unit, self.platform, self.vector)
+        raw_bpc = self.unit.bandwidth / self.unit.freq_hz
         plat = self.platform
         groups: "dict[str, dict]" = {}
         order: "list[str]" = []
         ideal = 0.0
         for node in graph.topo_order():
-            key = _GEMM_SUFFIX.sub("", node.layer)
+            key = step_label(node.layer)
             if key not in groups:
-                groups[key] = {"tiles": [], "vec": 0.0, "n_vec": 0,
-                               "mem": 0.0}
+                groups[key] = {"tiles": [], "nodes": [], "vec": 0.0,
+                               "n_vec": 0, "mem": 0.0, "release": 0.0}
                 order.append(key)
             g = groups[key]
+            g["release"] = max(g["release"], node.release_time)
             if node.kind == "matmul":
                 g["tiles"].append(tile_costs(machine, node))
+                g["nodes"].append(node)
                 ideal += (node.task.macs
                           / self.unit.macs_per_cycle(node.task.data_type))
             elif node.kind == "vector":
@@ -107,21 +119,37 @@ class AnalyticalBackend(PartitionedBackend):
                 g["mem"] += node.mem_bytes / machine.bytes_per_cycle
 
         cycles = 0.0
+        spans: "dict[str, tuple[float, float]]" = {}
         detail = {"matrix": 0.0, "vector": 0.0, "memory": 0.0,
                   "dispatch": 0.0, "groups": len(order)}
         for key in order:
             g = groups[key]
             tiles, vec, mem = g["tiles"], g["vec"], g["mem"]
+            # Successive groups serialise on the chain; a group also
+            # waits out its release time (request arrival semantics).
+            start = max(cycles, g["release"])
             if not tiles:
-                cycles += vec + mem
+                cycles = start + vec + mem
+                spans[key] = (start, cycles)
                 detail["vector"] += vec
                 detail["memory"] += mem
                 continue
             # Three streams race; the slower one carries the makespan.
             # PE stream: first load exposed as fill, then back-to-back
             # computes, then the last tile's writeback / pipeline drain.
+            # With k_stream the fill shrinks to the first K chunk (the
+            # rest of the first tile's load hides behind its compute) and
+            # the compute exposed past the loader drain shrinks to the
+            # last tile's final chunk.
             last = tiles[-1]
-            pe_stream = (tiles[0]["load"]
+            fill_load = tiles[0]["load"]
+            last_exposed = last["compute"]
+            if self.k_stream:
+                first_chunks = tile_chunks(self.unit, plat, g["nodes"][0])
+                fill_load = first_chunks[0][0] / raw_bpc
+                last_exposed = tile_chunks(self.unit, plat,
+                                           g["nodes"][-1])[-1][1]
+            pe_stream = (fill_load
                          + sum(c["compute"] for c in tiles)
                          + max(last["writeback"],
                                self.unit.pe_pipeline_stages
@@ -131,7 +159,7 @@ class AnalyticalBackend(PartitionedBackend):
             # drain, overlapping the ~two writebacks still backlogged.
             backlog = min(len(tiles) - 1, 2) * last["writeback"]
             loader_stream = (sum(c["load"] + c["writeback"] for c in tiles)
-                             + max(0.0, last["compute"] - backlog))
+                             + max(0.0, last_exposed - backlog))
             dispatch = len(tiles) * (plat.dispatch_cycles
                                      + plat.check_cycles)
             matrix = plat.dispatch_cycles + max(pe_stream, loader_stream,
@@ -147,15 +175,17 @@ class AnalyticalBackend(PartitionedBackend):
                     share = max(0.0, share - 3.0 * last["writeback"])
                 fill = (plat.dispatch_cycles + tiles[0]["load"]
                         + tiles[0]["compute"])
-                cycles += max(matrix + share, fill + vec)
+                cycles = start + max(matrix + share, fill + vec)
             else:
                 # one epilogue after everything (LAYER granularity or an
                 # unfused round-trip): phases serialise.
-                cycles += matrix + vec + mem
+                cycles = start + matrix + vec + mem
+            spans[key] = (start, cycles)
             detail["matrix"] += matrix
             detail["vector"] += vec
             detail["memory"] += mem
             detail["dispatch"] += dispatch
+        detail["step_spans"] = spans
         return ExecResult(cycles=cycles, seconds=cycles / self.unit.freq_hz,
                           utilization=ideal / cycles if cycles else 0.0,
                           detail=detail)
@@ -170,17 +200,29 @@ class AnalyticalBackend(PartitionedBackend):
         pool_bpc = topo.shared_bandwidth / freq
         mem_bpc = pool_bpc * plat.dram_efficiency
 
-        # Group by layer (serial chain), then by owning unit within a
-        # group (units run a group's shards concurrently).
+        # Group by layer, then by owning unit within a group (units run
+        # a group's shards concurrently).  Groups are scheduled as a DAG
+        # — a chained schedule graph degenerates to the serial walk, a
+        # relaxed one lets hazard-free groups overlap wherever their
+        # units differ (per-unit availability keeps same-unit groups
+        # serial, mirroring what the DES's resource contention does).
         groups: "dict[str, dict]" = {}
         order: "list[str]" = []
+        key_of_nid: "dict[int, str]" = {}
         ideal = 0.0
         for node in part.graph.topo_order():
-            key = _GEMM_SUFFIX.sub("", node.layer)
+            key = step_label(node.layer)
+            key_of_nid[node.nid] = key
             if key not in groups:
-                groups[key] = {"units": {}, "mem": 0.0}
+                groups[key] = {"units": {}, "mem": 0.0, "release": 0.0,
+                               "deps": set()}
                 order.append(key)
             g = groups[key]
+            g["release"] = max(g["release"], node.release_time)
+            for d in node.deps:
+                dk = key_of_nid[d]
+                if dk != key:
+                    g["deps"].add(dk)
             u = node.unit
             if node.kind == "memory":
                 # inter-unit transfers / spills ride the shared pool.
@@ -211,15 +253,30 @@ class AnalyticalBackend(PartitionedBackend):
 
         cycles = 0.0
         shared_total = 0.0
+        unit_free = [0.0] * topo.n_units
+        end: "dict[str, float]" = {}
+        spans: "dict[str, tuple[float, float]]" = {}
         detail = {"groups": len(order), "memory": 0.0}
         for key in order:
             g = groups[key]
-            t, shared = self._cluster_group_cycles(g, plat)
-            cycles += t + g["mem"]
+            shared, unit_times = self._cluster_group_cycles(g, plat)
+            base = max([g["release"]] + [end[d] for d in g["deps"]],
+                       default=0.0)
+            g_end = base
+            for u, tu in unit_times.items():
+                s_u = max(base, unit_free[u])
+                unit_free[u] = s_u + tu
+                g_end = max(g_end, unit_free[u])
+            # pool-capacity floor + serialised transfer traffic.
+            g_end = max(g_end, base + shared) + g["mem"]
+            end[key] = g_end
+            spans[key] = (base, g_end)
+            cycles = max(cycles, g_end)
             shared_total += shared + g["mem"]
             detail["memory"] += g["mem"]
         detail["loader_utilization"] = (shared_total / cycles
                                         if cycles else 0.0)
+        detail["step_spans"] = spans
         detail["partition"] = {"strategy": part.strategy,
                                "n_units": part.n_units,
                                "transfers": part.n_transfers,
@@ -230,14 +287,16 @@ class AnalyticalBackend(PartitionedBackend):
             utilization=ideal / (cycles * n) if cycles else 0.0,
             detail=detail)
 
-    def _cluster_group_cycles(self, g: dict, plat) -> "tuple[float, float]":
+    def _cluster_group_cycles(self, g: dict,
+                              plat) -> "tuple[float, dict]":
         """One layer group on the cluster: per-unit streams raced
         concurrently, shared-loader traffic derated by the PS slowdown
-        fixed point, the pool's aggregate capacity as the floor.
-        Returns ``(group cycles, shared loader work)``."""
+        fixed point (the caller applies the pool-capacity floor when
+        placing the group).  Returns ``(shared loader work, per-unit
+        cycles at the converged slowdowns)``."""
         units = g["units"]
         if not units:
-            return 0.0, 0.0
+            return 0.0, {}
         shared_work = {
             u: sum(t["load"] + t["writeback"] for t in st["tiles"]
                    if t["shared"])
@@ -290,7 +349,8 @@ class AnalyticalBackend(PartitionedBackend):
                 rho_other = (total_shared - shared_work[u]) / t_group
                 slow[u] = (min(cap, 1.0 / (1.0 - rho_other))
                            if rho_other < 1.0 else cap)
-        return t_group, total_shared
+        unit_times = {u: unit_time(u, slow[u]) for u in units}
+        return total_shared, unit_times
 
     def run_workload(self, layers, *, fused=None, unit=None, platform=None,
                      vector=None):

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Callable, Iterable, Optional, Union
+from typing import Callable, Optional, Union
 
 from repro.core.config import CASE_STUDY, MatrixUnitConfig
 from repro.core.fusion import (Epilogue, EpilogueOperands, NO_EPILOGUE,
@@ -169,18 +169,33 @@ class Backend(abc.ABC):
         return out
 
     # ----- granularity-aware lowering --------------------------------------
-    def lower(self, work: "MatMulTask | Iterable[LayerTrace]", *,
+    def lower(self, work, *,
               epilogue: Optional[Epilogue] = None,
               vector_ops: "dict[str, float] | None" = None):
         """Tile ``work`` into a TaskGraph at this backend's granularity.
 
-        ``work`` is either one ``MatMulTask`` (with an optional fused
-        ``epilogue``, whose abstract Saturn cost is attached so the same
-        graph carries both payloads) or a list of ``LayerTrace``s (a
-        workload / serving schedule, chained with this backend's
-        ``fused`` policy via ``workload_to_graph``).
+        :param work: one of
+
+            * a single :class:`~repro.core.task.MatMulTask` — tiled by
+              ``build_gemm_graph``; an optional fused ``epilogue`` has
+              its abstract Saturn cost attached so the same graph
+              carries both the simulation and the JAX payload;
+            * a list of :class:`~repro.core.simulator.LayerTrace`\\ s —
+              a workload, chained serially with this backend's
+              ``fused`` policy via ``workload_to_graph``;
+            * a serving ``BatchSchedule`` — lowered via
+              ``schedule_to_graph`` with the schedule's own ``overlap``
+              mode (``"relaxed"`` keeps only true per-request hazard
+              edges) and its arrival-derived release times stamped on
+              the nodes.
+        :param epilogue: fused epilogue for the single-task form only.
+        :param vector_ops: explicit abstract vector costs (single-task
+            form only; derived from ``epilogue`` when omitted).
+        :returns: a :class:`~repro.sim.graph.TaskGraph` ready for
+            ``run_graph``.
         """
-        from repro.sim.lower import epilogue_vector_ops, workload_to_graph
+        from repro.sim.lower import (epilogue_vector_ops,
+                                     schedule_to_graph, workload_to_graph)
         from repro.sim.graph import build_gemm_graph
         if isinstance(work, MatMulTask):
             if epilogue is not None and vector_ops is None:
@@ -194,6 +209,10 @@ class Backend(abc.ABC):
             raise ValueError(
                 "epilogue/vector_ops apply to a single MatMulTask; a "
                 "LayerTrace workload carries its own vector work")
+        if hasattr(work, "steps") and hasattr(work, "layers"):
+            return schedule_to_graph(self.unit, work, fused=self.fused,
+                                     granularity=self.granularity,
+                                     platform=self.platform)
         return workload_to_graph(self.unit, list(work), fused=self.fused,
                                  granularity=self.granularity,
                                  platform=self.platform)

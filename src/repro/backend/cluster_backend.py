@@ -112,7 +112,8 @@ class ClusterDESimBackend(PartitionedBackend):
 
     def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
         from repro.sim.desim import simulate_cluster
-        from repro.sim.lower import execute_graph_jax, execute_workload_jax
+        from repro.sim.lower import (execute_graph_jax,
+                                     execute_workload_jax, step_spans)
         part = self.partition(graph)
         r = simulate_cluster(part.graph, self.topology())
         output, outputs = None, None
@@ -130,6 +131,7 @@ class ClusterDESimBackend(PartitionedBackend):
                 "unit_utilizations": r.unit_utilizations(),
                 "loader_utilization": r.loader_utilization,
                 "loader_contention": r.loader_contention(),
+                "step_spans": step_spans(part.graph, r),
                 "partition": {"strategy": part.strategy,
                               "n_units": part.n_units,
                               "transfers": part.n_transfers,

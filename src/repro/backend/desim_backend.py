@@ -36,7 +36,8 @@ class DESimBackend(Backend):
 
     def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
         from repro.sim.desim import simulate_graph
-        from repro.sim.lower import execute_graph_jax, execute_workload_jax
+        from repro.sim.lower import (execute_graph_jax,
+                                     execute_workload_jax, step_spans)
         r = simulate_graph(graph, self.unit, self.platform, self.vector)
         output, outputs = None, None
         if isinstance(operands, dict):
@@ -47,7 +48,8 @@ class DESimBackend(Backend):
         return ExecResult(output=output, outputs=outputs, cycles=r.cycles,
                           seconds=r.seconds(),
                           utilization=r.matrix_utilization, timeline=r,
-                          detail={"utilizations": r.utilizations()})
+                          detail={"utilizations": r.utilizations(),
+                                  "step_spans": step_spans(graph, r)})
 
     def run_workload(self, layers, *, fused=None, unit=None, platform=None,
                      vector=None):

@@ -54,8 +54,20 @@ def main(argv=None):
                     help="serving batching policy for --plan: "
                          "'full-prefill', 'chunked-prefill', "
                          "'decode-priority', or 'auto' (price every "
-                         "policy x partition candidate with the "
-                         "analytical closed form and pick the best)")
+                         "policy x partition x overlap candidate with "
+                         "the analytical closed form and pick the best)")
+    ap.add_argument("--overlap", default="chained",
+                    choices=("chained", "relaxed"),
+                    help="schedule lowering mode for --plan: 'chained' "
+                         "serialises every step, 'relaxed' keeps only "
+                         "true per-request hazards so steps on disjoint "
+                         "units overlap (ignored by --policy auto, "
+                         "which sweeps both)")
+    ap.add_argument("--arrival-gap", type=float, default=0.0,
+                    metavar="CYCLES",
+                    help="inter-request arrival gap in cycles: request i "
+                         "arrives at i*GAP, so --plan reports TTFT under "
+                         "load instead of the all-at-t=0 lower bound")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=args.reduced)
@@ -71,7 +83,8 @@ def main(argv=None):
     for i in range(args.requests):
         n = 4 + (i * 3) % 12
         key, sub = jax.random.split(key)
-        eng.submit(jax.random.randint(sub, (n,), 0, cfg.vocab_size))
+        eng.submit(jax.random.randint(sub, (n,), 0, cfg.vocab_size),
+                   arrival_time=i * args.arrival_gap)
     if args.plan:
         from repro.serving.scheduler import (decode_latency_stats,
                                              price_steps)
@@ -84,6 +97,7 @@ def main(argv=None):
             sched, res = eng.evaluate_schedule(
                 args.plan, max_new_tokens=args.max_new,
                 units=args.plan_units, policy=args.policy,
+                overlap=args.overlap,
                 granularity=args.plan_granularity, workload=False,
                 **plan_kw)
             step_cycles = price_steps(sched, args.plan,
@@ -102,10 +116,12 @@ def main(argv=None):
               + f"), graph slice {res.cycles:.0f} cyc "
               f"(matrix_util={res.utilization:.1%}); full schedule "
               f"{full:.0f} cyc = {full_us:.1f} us")
-        print(f"[plan:{args.plan}] decode first-token "
-              f"p50={stats['decode_p50']:.0f} cyc "
-              f"p99={stats['decode_p99']:.0f} cyc, inter-token "
-              f"p50={stats['itl_p50']:.0f} cyc")
+        print(f"[plan:{args.plan}] TTFT (first token from arrival) "
+              f"p50={stats['ttft_p50']:.0f} cyc "
+              f"p99={stats['ttft_p99']:.0f} cyc, inter-token "
+              f"p50={stats['itl_p50']:.0f} cyc, "
+              f"overlap={sched.overlap} "
+              f"makespan={stats['makespan']:.0f} cyc")
         if res.timeline is not None:
             utils = " ".join(f"{k}={v:.1%}"
                              for k, v in res.timeline.utilizations().items())

@@ -39,6 +39,24 @@ class GenerateResult:
     steps: int
 
 
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One queued serving request.
+
+    ``arrival_time`` is the cycle (simulated-machine clock, the same
+    currency every backend prices in) at which the request becomes
+    available.  It flows ``submit`` → ``PolicyContext.arrival_times`` →
+    per-step ``BatchSchedule.release_times`` → ``Node.release_time``,
+    so the DES refuses to start a step before its requests exist and
+    ``decode_latency_stats`` reports TTFT against the arrival instead of
+    the t = 0 lower bound.  The default 0.0 reproduces the classic
+    everything-queued-at-plan-time behaviour exactly.
+    """
+
+    tokens: jax.Array
+    arrival_time: float = 0.0
+
+
 def make_prefill(cfg: ArchConfig):
     mod = family_module(cfg)
 
@@ -136,6 +154,17 @@ class BatchSchedule:
     ``unit-affinity`` partition strategy, and ``strategy`` records the
     partition strategy ``plan(policy="auto")`` priced the schedule
     against (``None``: caller's choice).
+
+    ``overlap`` selects how the steps lower into one TaskGraph
+    (``sim.lower.workload_to_graph``): ``"chained"`` serialises every
+    step behind the previous one (the classic over-approximation);
+    ``"relaxed"`` keeps only the true per-request data hazards
+    (:meth:`step_deps`), so steps placed on disjoint units genuinely run
+    concurrently.  ``arrival_times`` (per request id, cycles) and
+    ``release_times`` (per step — the max arrival over the step's
+    requests) carry request-arrival semantics into the graph as node
+    release times and into ``decode_latency_stats`` as the TTFT
+    baseline.
     """
 
     steps: "list[BatchStep]"
@@ -144,6 +173,31 @@ class BatchSchedule:
     policy: str = "full-prefill"
     affinity: "dict[str, int]" = dataclasses.field(default_factory=dict)
     strategy: "Optional[str]" = None
+    overlap: str = "chained"
+    arrival_times: "tuple[float, ...]" = ()
+    release_times: "tuple[float, ...]" = ()
+
+    def step_deps(self) -> "list[tuple[int, ...]]":
+        """True cross-step data hazards: step *j* depends on step *i*
+        iff *i* is the most recent earlier step touching one of *j*'s
+        requests — the per-request KV-cache/activation chain (a decode
+        iteration reads the KV its own prefill and earlier decode steps
+        wrote; steps over disjoint requests share no state).  This is
+        the dependency set ``overlap="relaxed"`` lowers, replacing the
+        coarse chain with edges that cannot change results."""
+        last: "dict[int, int]" = {}
+        deps: "list[tuple[int, ...]]" = []
+        for j, step in enumerate(self.steps):
+            dj = sorted({last[r] for r in step.requests if r in last})
+            deps.append(tuple(dj))
+            for r in step.requests:
+                last[r] = j
+        return deps
+
+    def arrival_of(self, request: int) -> float:
+        """Arrival cycle of a request id (0.0 when arrivals untracked)."""
+        return (self.arrival_times[request]
+                if request < len(self.arrival_times) else 0.0)
 
     def gemm_tasks(self) -> "dict[str, MatMulTask]":
         """``{graph GEMM label: task}`` — the labels
@@ -213,12 +267,36 @@ class ServingEngine:
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
-        self._queue: list = []
+        self._queue: list = []            # token arrays, submission order
+        self._arrivals: "list[float]" = []   # per-request arrival cycles
 
-    def submit(self, tokens) -> int:
-        """Queue a request; returns a request id (asyncMatMul-style)."""
+    def submit(self, tokens, arrival_time: float = 0.0) -> int:
+        """Queue a request; returns a request id (asyncMatMul-style).
+
+        ``tokens`` is a prompt token array or a :class:`Request`.
+        ``arrival_time`` (cycles) is when the request becomes available:
+        schedules planned from this queue stamp it on their steps as
+        release times, so pricing reports genuine time-to-first-token
+        under load rather than the all-arrived-at-t=0 lower bound.
+        Requests must be submitted in non-decreasing arrival order (the
+        queue *is* the arrival order)."""
+        if isinstance(tokens, Request):
+            tokens, arrival_time = tokens.tokens, tokens.arrival_time
+        if arrival_time < 0:
+            raise ValueError(f"arrival_time must be >= 0, "
+                             f"got {arrival_time}")
+        if self._arrivals and arrival_time < self._arrivals[-1]:
+            raise ValueError(
+                f"arrival_time {arrival_time} precedes the previous "
+                f"request's {self._arrivals[-1]}; submit in arrival order")
         self._queue.append(jnp.asarray(tokens))
+        self._arrivals.append(float(arrival_time))
         return len(self._queue) - 1
+
+    @property
+    def requests(self) -> "list[Request]":
+        """The pending queue as :class:`Request` records."""
+        return [Request(t, a) for t, a in zip(self._queue, self._arrivals)]
 
     # ----- batch schedules -> backends -----------------------------------
     def _policy_context(self, max_new_tokens: int, units: int):
@@ -227,10 +305,13 @@ class ServingEngine:
             cfg=self.cfg,
             prompt_lengths=tuple(int(t.shape[-1]) for t in self._queue),
             max_batch=self.max_batch, max_new_tokens=max_new_tokens,
-            units=units)
+            units=units,
+            arrival_times=(tuple(self._arrivals)
+                           if any(self._arrivals) else ()))
 
     def plan(self, max_new_tokens: int = 32, units: int = 1,
-             policy: str = "full-prefill", **policy_kw) -> BatchSchedule:
+             policy: str = "full-prefill", overlap: str = "chained",
+             **policy_kw) -> BatchSchedule:
         """Plan the continuous-batching drain of the current queue
         (non-destructive) under a :mod:`repro.serving.scheduler` batching
         policy.  The default ``full-prefill`` reproduces the classic
@@ -239,19 +320,28 @@ class ServingEngine:
         steps of ``B`` tokens (collapsed into one repeated LayerTrace).
         ``chunked-prefill`` / ``decode-priority`` interleave prefill
         chunks with in-flight decode; ``policy="auto"`` prices every
-        (policy × partition) candidate with the contention-aware
-        ``analytical`` closed form and returns the best one.
+        (policy × partition × overlap) candidate with the
+        contention-aware ``analytical`` closed form and returns the best
+        one.
 
         ``units`` is the cluster width the schedule targets — recorded on
         the schedule and consumed by ``evaluate_schedule`` so a cluster
-        backend prices the drain on ``units`` contended matrix units."""
+        backend prices the drain on ``units`` contended matrix units.
+        ``overlap`` selects the step-chaining mode the schedule lowers
+        with (``"chained"`` serial / ``"relaxed"`` true data hazards
+        only — see :class:`BatchSchedule`); ignored by ``policy="auto"``
+        which sweeps both."""
         from repro.serving import scheduler
+        from repro.sim.lower import OVERLAP_MODES
+        if overlap not in OVERLAP_MODES:
+            raise ValueError(f"unknown overlap mode {overlap!r}; one of "
+                             f"{OVERLAP_MODES}")
         ctx = self._policy_context(max_new_tokens, units)
         if policy == "auto":
             # policy kwargs (chunk_tokens, ...) sweep the candidates;
             # select_schedule's own knobs pass through by name.
             select = {"backend_name", "objective", "makespan_slack",
-                      "policies", "strategies", "policy_kw"}
+                      "policies", "strategies", "overlaps", "policy_kw"}
             kw = {k: v for k, v in policy_kw.items() if k in select}
             extra = {k: v for k, v in policy_kw.items()
                      if k not in select}
@@ -259,7 +349,9 @@ class ServingEngine:
                 kw["policy_kw"] = {**extra, **kw.get("policy_kw", {})}
             sched, _ = scheduler.select_schedule(ctx, **kw)
             return sched
-        return scheduler.get_policy(policy, **policy_kw).schedule(ctx)
+        sched = scheduler.get_policy(policy, **policy_kw).schedule(ctx)
+        sched.overlap = overlap
+        return sched
 
     def autoplan(self, max_new_tokens: int = 32, units: int = 1,
                  **select_kw) -> "tuple[BatchSchedule, dict]":
@@ -274,12 +366,16 @@ class ServingEngine:
                           max_new_tokens: int = 32, operands=None,
                           units: Optional[int] = None,
                           policy: str = "full-prefill",
+                          overlap: str = "chained",
                           workload: bool = True,
                           **backend_kwargs):
         """Price the planned schedule on a modelling backend.
 
-        Lowers ``plan(max_new_tokens, units, policy)`` through
+        Lowers ``plan(max_new_tokens, units, policy, overlap)`` through
         ``workload_to_graph`` at the backend's granularity/fusion policy
+        (``overlap="relaxed"`` keeps only true per-request hazards, so
+        steps on disjoint units overlap on the priced timeline; arrival
+        times become node release times either way)
         and runs the graph — ``desim`` returns the per-resource timeline
         (and, given ``operands``, the executed numbers);
         ``desim-cluster`` with ``units=N`` prices the same schedule on N
@@ -300,15 +396,19 @@ class ServingEngine:
         from repro import backend
         from repro.serving.scheduler import backend_kwargs_for
         units = 1 if units is None else units
-        sched = self.plan(max_new_tokens, units=units, policy=policy)
+        sched = self.plan(max_new_tokens, units=units, policy=policy,
+                          overlap=overlap)
         backend_kwargs = backend_kwargs_for(sched, units=units,
                                             **backend_kwargs)
+        # the schedule records the partition it was actually priced
+        # under, so downstream latency timelines agree with the pricing.
+        sched.strategy = backend_kwargs.get("strategy", sched.strategy)
         eng = backend.get(backend_name, **backend_kwargs)
         if not eng.models_time:
             raise ValueError(
                 f"backend {backend_name!r} executes but does not model "
                 "time; use 'desim' or 'analytical'")
-        graph = eng.lower(sched.layers)
+        graph = eng.lower(sched)
         result = eng.run_graph(graph, operands)
         if workload:
             result.detail["workload"] = eng.run_workload(sched.layers)
@@ -320,6 +420,7 @@ class ServingEngine:
         while self._queue:
             chunk, self._queue = (self._queue[: self.max_batch],
                                   self._queue[self.max_batch:])
+            self._arrivals = self._arrivals[len(chunk):]
             s = max(int(t.shape[-1]) for t in chunk)
             toks = jnp.stack([jnp.pad(t, (s - t.shape[-1], 0)) for t in chunk])
             batch = {"tokens": toks}

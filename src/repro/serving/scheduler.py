@@ -42,10 +42,17 @@ Every policy lowers to the same ``BatchSchedule`` → ``workload_to_graph``
 path, so any policy is priceable on ``desim`` / ``desim-cluster``
 timelines, priced by the contention-aware ``analytical`` closed form
 without running the DES, and executed bit-exactly on the ``jax``
-backend.  :func:`decode_latency_stats` turns per-step prices into the
-serving metrics (decode first-token p50/p99 from queue time, inter-token
-latency) and :func:`select_schedule` auto-picks the best
-(policy × partition) candidate — ``plan(policy="auto")``.
+backend.  Two scheduling axes ride along the schedule itself:
+**arrival times** (``PolicyContext.arrival_times`` → per-step release
+times → ``Node.release_time``, so TTFT reflects queueing under load
+instead of the all-at-t=0 lower bound) and the **overlap mode**
+(``chained`` serial vs ``relaxed`` true per-request hazards only — see
+``BatchSchedule.step_deps`` / ``docs/serving.md``).
+:func:`decode_latency_stats` turns per-step prices into the serving
+metrics (TTFT p50/p99 from each request's own arrival, inter-token
+latency, overlap-aware makespan) and :func:`select_schedule` auto-picks
+the best (policy × partition × overlap) candidate —
+``plan(policy="auto")``.
 """
 
 from __future__ import annotations
@@ -64,13 +71,35 @@ from typing import Optional
 class PolicyContext:
     """Everything a batching policy may look at: the queue (per-request
     prompt lengths, in submission order), the engine's batching limit,
-    the decode horizon, and the cluster width the schedule targets."""
+    the decode horizon, the cluster width the schedule targets, and the
+    per-request arrival times.
+
+    ``arrival_times`` (cycles, one per request, non-decreasing — the
+    queue is the arrival order) is how load reaches the plan: a step's
+    release time is the latest arrival among its requests, stamped onto
+    the lowered graph as ``Node.release_time`` and used as the TTFT
+    baseline by :func:`decode_latency_stats`.  Empty means the classic
+    all-arrived-at-t=0 queue.
+    """
 
     cfg: object                       # models.base.ArchConfig
     prompt_lengths: "tuple[int, ...]"
     max_batch: int
     max_new_tokens: int
     units: int = 1
+    arrival_times: "tuple[float, ...]" = ()
+
+    def __post_init__(self):
+        if self.arrival_times and \
+                len(self.arrival_times) != len(self.prompt_lengths):
+            raise ValueError(
+                f"{len(self.arrival_times)} arrival_times for "
+                f"{len(self.prompt_lengths)} requests")
+
+    def arrival_of(self, request: int) -> float:
+        """Arrival cycle of a request (0.0 when arrivals untracked)."""
+        return (self.arrival_times[request]
+                if request < len(self.arrival_times) else 0.0)
 
     @property
     def n_layers(self) -> int:
@@ -121,14 +150,23 @@ def get_policy(name: str, **kw) -> "SchedulingPolicy":
 
 
 class SchedulingPolicy(abc.ABC):
-    """One batching policy: queue in, :class:`BatchSchedule` out."""
+    """One batching policy: queue in, :class:`BatchSchedule` out.
+
+    Subclasses implement :meth:`schedule`; the shared helpers
+    (``_emit`` / ``_finish``) keep every policy on the common
+    ``BatchStep``/``LayerTrace`` lowering path and stamp the
+    context's arrival times onto the schedule as per-step release
+    times, so arrival semantics and overlap modes work for any
+    registered policy without per-policy code.
+    """
 
     name: str = "abstract"
 
     @abc.abstractmethod
     def schedule(self, ctx: PolicyContext):
-        """Lower ``ctx`` into a BatchSchedule (policy/affinity fields
-        filled in)."""
+        """Lower ``ctx`` into a :class:`~repro.serving.engine
+        .BatchSchedule` (policy / affinity / arrival-derived release
+        fields filled in)."""
 
     # ----- shared lowering helpers -----------------------------------------
     def _emit(self, steps, layers, ctx, kind, name, requests, tokens,
@@ -141,9 +179,19 @@ class SchedulingPolicy(abc.ABC):
 
     def _finish(self, steps, layers, ctx, affinity=None):
         from repro.serving.engine import BatchSchedule
+        release = ()
+        if ctx.arrival_times:
+            # a padded batch step cannot form before its last request
+            # arrives; decode/mixed steps inherit the same bound (their
+            # hazard deps dominate it in practice).
+            release = tuple(
+                max((ctx.arrival_of(r) for r in s.requests), default=0.0)
+                for s in steps)
         return BatchSchedule(steps, layers, units=ctx.units,
                              policy=self.name,
-                             affinity=dict(affinity or {}))
+                             affinity=dict(affinity or {}),
+                             arrival_times=tuple(ctx.arrival_times),
+                             release_times=release)
 
 
 # ---------------------------------------------------------------------------
@@ -350,49 +398,118 @@ def _percentile(xs: "list[float]", q: float) -> float:
     return xs[min(rank, len(xs)) - 1]
 
 
-def decode_latency_stats(sched, step_cycles: "list[float]",
-                         n_layers: int) -> "dict[str, float]":
-    """Serving metrics from a priced schedule.
+def _effective_strategy(sched) -> str:
+    """The partition strategy pricing actually uses for ``sched`` — the
+    same resolution order as :func:`backend_kwargs_for`."""
+    return sched.strategy or ("unit-affinity" if sched.affinity
+                              else "output-tile")
 
-    The queue is all present at plan time (t = 0), so a request's decode
-    tokens complete as the serial step timeline reaches them; a step
-    covering ``repeat / n_layers`` decode iterations emits its tokens
-    uniformly across its span.  Reported:
 
-    * ``decode_p50`` / ``decode_p99`` — per-request latency from queue
-      time to the *first* decode token (the decode-queueing delay a
-      batching policy controls; full prefill makes later batches wait
-      out every earlier drain).
-    * ``itl_p50`` / ``itl_p99`` — inter-token latency between successive
-      decode tokens of one request (the cadence cost of interleaving).
-    * ``makespan`` — total cycles of the serial step timeline.
+def schedule_timeline(sched,
+                      step_cycles: "list[float]",
+                      ) -> "list[tuple[float, float]]":
+    """Per-step ``(start, end)`` cycles of a priced schedule — the
+    first-order timeline :func:`decode_latency_stats` consumes.
+
+    ``overlap="chained"`` (and every single-unit schedule): steps run
+    serially, each waiting out its release time first — exactly the
+    classic cumulative walk when arrivals are all zero.
+
+    ``overlap="relaxed"`` on a multi-unit ``unit-affinity`` schedule:
+    a step starts at the latest of its release time, its hazard deps'
+    (:meth:`~repro.serving.engine.BatchSchedule.step_deps`) completions,
+    and the free time of the units it occupies — a step with an affinity
+    hint occupies that unit alone, unhinted steps occupy the remaining
+    (un-hinted) units, so a pinned decode stream runs beside prefill
+    chunks the way the partitioner lays them out.  This is a list-
+    schedule approximation (each step is still priced at its backend
+    cost); the DES on the relaxed graph is the ground truth it tracks.
     """
     if len(step_cycles) != len(sched.steps):
         raise ValueError(f"{len(step_cycles)} step prices for "
                          f"{len(sched.steps)} steps")
-    t = 0.0
+    n = len(sched.steps)
+    rel = list(sched.release_times) or [0.0] * n
+    relaxed = (sched.overlap == "relaxed" and sched.units > 1
+               and _effective_strategy(sched) == "unit-affinity"
+               and sched.affinity)
+    if not relaxed:
+        spans = []
+        t = 0.0
+        for r, cyc in zip(rel, step_cycles):
+            start = max(t, r)
+            t = start + cyc
+            spans.append((start, t))
+        return spans
+
+    deps = sched.step_deps()
+    hinted = set(sched.affinity.values())
+    rest = [u for u in range(sched.units) if u not in hinted] \
+        or list(range(sched.units))
+    free = [0.0] * sched.units
+    end: "list[float]" = [0.0] * n
+    spans = []
+    for j, (step, cyc) in enumerate(zip(sched.steps, step_cycles)):
+        hint = sched.affinity.get(sched.layers[j].name)
+        occupies = [hint] if hint is not None else rest
+        start = max([rel[j]] + [end[d] for d in deps[j]]
+                    + [free[u] for u in occupies])
+        end[j] = start + cyc
+        for u in occupies:
+            free[u] = end[j]
+        spans.append((start, end[j]))
+    return spans
+
+
+def decode_latency_stats(sched, step_cycles: "list[float]",
+                         n_layers: int) -> "dict[str, float]":
+    """Serving metrics from a priced schedule.
+
+    Steps are placed on the :func:`schedule_timeline` (serial for
+    chained schedules, hazard/unit-constrained for relaxed multi-unit
+    ones; release times from request arrivals either way); a step
+    covering ``repeat / n_layers`` decode iterations emits its tokens
+    uniformly across its span.  Reported:
+
+    * ``ttft_p50`` / ``ttft_p99`` — per-request **time to first token**:
+      from the request's own arrival to its first decode token (the
+      queueing delay a batching policy controls; full prefill makes
+      later batches wait out every earlier drain).  With an all-at-t=0
+      queue this equals the classic decode-queueing delay.
+    * ``decode_p50`` / ``decode_p99`` — same values, kept under the
+      pre-arrival-semantics names every existing caller uses.
+    * ``itl_p50`` / ``itl_p99`` — inter-token latency between successive
+      decode tokens of one request (the cadence cost of interleaving).
+    * ``makespan`` — cycles until the last step completes (strictly
+      below the serial sum when relaxed overlap genuinely overlaps).
+    """
+    spans = schedule_timeline(sched, step_cycles)
     first: "dict[int, float]" = {}
     last: "dict[int, float]" = {}
     itl: "list[float]" = []
-    for step, cyc in zip(sched.steps, step_cycles):
+    for step, (start, end) in zip(sched.steps, spans):
         dr = step.decode_requests or (
             step.requests if step.kind == "decode" else ())
         if dr:
             iters = max(1, round(step.repeat / n_layers))
             for j in range(iters):
-                tok = t + cyc * (j + 1) / iters
+                tok = start + (end - start) * (j + 1) / iters
                 for r in dr:
                     if r in last:
                         itl.append(tok - last[r])
                     else:
                         first[r] = tok
                     last[r] = tok
-        t += cyc
-    lat = list(first.values())
+    lat = [t - sched.arrival_of(r) for r, t in first.items()]
+    ttft = {
+        "ttft_p50": _percentile(lat, 50.0),
+        "ttft_p99": _percentile(lat, 99.0),
+    }
     return {
-        "makespan": t,
-        "decode_p50": _percentile(lat, 50.0),
-        "decode_p99": _percentile(lat, 99.0),
+        "makespan": max((e for _, e in spans), default=0.0),
+        "decode_p50": ttft["ttft_p50"],
+        "decode_p99": ttft["ttft_p99"],
+        **ttft,
         "itl_p50": _percentile(itl, 50.0),
         "itl_p99": _percentile(itl, 99.0),
         "decode_tokens": float(len(itl) + len(first)),
@@ -404,9 +521,15 @@ def schedule_metrics(sched, n_layers: int,
                      **backend_kwargs) -> "dict[str, float]":
     """One-call pricing: per-step costs + latency stats + aggregate
     matrix utilization of the whole schedule on ``backend_name`` — one
-    ``run_workload`` pass per step, shared by both."""
+    ``run_workload`` pass per step, shared by both.  An explicit
+    ``strategy=`` override reaches the latency timeline too, so the
+    relaxed-overlap placement model always matches the partition the
+    steps were actually priced under."""
     works = _price_workloads(sched, backend_name, **backend_kwargs)
     cycles = [w["cycles"] for w in works]
+    resolved = backend_kwargs_for(sched, **backend_kwargs).get("strategy")
+    if resolved is not None and resolved != sched.strategy:
+        sched = dataclasses.replace(sched, strategy=resolved)
     stats = decode_latency_stats(sched, cycles, n_layers)
     total = sum(cycles)
     # the single-unit simulate_workload reports busy matrix cycles, the
@@ -430,24 +553,37 @@ def select_schedule(ctx: PolicyContext, *,
                     makespan_slack: float = 0.05,
                     policies: "Optional[list[str]]" = None,
                     strategies: "Optional[list[str]]" = None,
+                    overlaps: "Optional[list[str]]" = None,
                     policy_kw: "Optional[dict]" = None,
                     **backend_kwargs):
-    """Price every (policy × partition strategy) candidate with the
-    closed-form ``analytical`` backend (no DES run) and return
+    """Price every (policy × partition strategy × overlap) candidate
+    with the closed-form ``analytical`` backend (no DES run) and return
     ``(best BatchSchedule, report)``.
 
     Objective: minimise ``objective`` (a :func:`decode_latency_stats`
     key) among candidates whose makespan is within ``makespan_slack`` of
     the fastest candidate — latency policies may not buy their p50 with
-    unbounded throughput loss.  ``policy_kw`` (e.g. ``chunk_tokens``)
+    unbounded throughput loss.  On a cluster the sweep includes
+    ``overlap="relaxed"`` lowering (true data hazards only), so a
+    relaxed-overlap candidate is picked exactly when the overlap lowers
+    the objective; single-unit sweeps stay chained (relaxed cannot
+    overlap anything there).  ``policy_kw`` (e.g. ``chunk_tokens``)
     is forwarded to every candidate policy that accepts it.  ``report``
-    maps candidate keys to their metric dicts (the chosen one under
-    ``"chosen"``).
+    maps candidate keys to their metric dicts (chained candidates keep
+    the bare ``policy×strategy`` key; relaxed ones append
+    ``×relaxed``), the chosen one repeated under ``"chosen"``.
     """
     names = list(policies or POLICIES)
     strats = list(strategies or
                   (["output-tile", "unit-affinity"] if ctx.units > 1
                    else [None]))
+    ovs = list(overlaps or
+               (["chained", "relaxed"] if ctx.units > 1 else ["chained"]))
+    from repro.sim.lower import OVERLAP_MODES
+    bad = [ov for ov in ovs if ov not in OVERLAP_MODES]
+    if bad:
+        raise ValueError(f"unknown overlap mode(s) {bad}; "
+                         f"one of {OVERLAP_MODES}")
     cands: "dict[str, tuple]" = {}
     for pname in names:
         try:
@@ -456,12 +592,29 @@ def select_schedule(ctx: PolicyContext, *,
             policy = get_policy(pname)
         base = policy.schedule(ctx)
         for strat in strats:
-            sched = dataclasses.replace(base, strategy=strat)
-            kw = dict(backend_kwargs)
-            if ctx.units > 1:
-                kw["units"] = ctx.units
-            m = schedule_metrics(sched, ctx.n_layers, backend_name, **kw)
-            cands[f"{pname}" + (f"×{strat}" if strat else "")] = (sched, m)
+            for ov in ovs:
+                sched = dataclasses.replace(base, strategy=strat,
+                                            overlap=ov)
+                if ov == "relaxed" and not (
+                        _effective_strategy(sched) == "unit-affinity"
+                        and sched.affinity):
+                    # identical metrics to the chained twin (the relaxed
+                    # timeline only differs under hinted unit-affinity
+                    # placement) — don't pay a second pricing pass.
+                    continue
+                kw = dict(backend_kwargs)
+                if ctx.units > 1:
+                    kw["units"] = ctx.units
+                m = schedule_metrics(sched, ctx.n_layers, backend_name,
+                                     **kw)
+                key = (f"{pname}" + (f"×{strat}" if strat else "")
+                       + (f"×{ov}" if ov != "chained" else ""))
+                cands[key] = (sched, m)
+    if not cands:
+        raise ValueError(
+            "no priceable candidates: overlap='relaxed' only differs "
+            "under a hint-emitting policy with the 'unit-affinity' "
+            "strategy — include 'chained' in overlaps or widen the sweep")
     best_makespan = min(m["makespan"] for _, m in cands.values())
     feasible = {k: v for k, v in cands.items()
                 if v[1]["makespan"] <= (1 + makespan_slack) * best_makespan}

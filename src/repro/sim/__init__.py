@@ -22,11 +22,12 @@ from repro.sim.desim import (ClusterDESimResult, DESimResult, Machine,
                              build_cluster, simulate_cluster,
                              simulate_graph)
 from repro.sim.partition import (Partition, STRATEGIES, partition_graph)
-from repro.sim.lower import (cluster_workload, desim_gemm, desim_layer,
-                             desim_workload, epilogue_vector_ops,
-                             execute_graph_jax, execute_workload_jax,
-                             exposed_dispatch, gemm_labels, layer_to_graph,
-                             workload_to_graph)
+from repro.sim.lower import (OVERLAP_MODES, cluster_workload, desim_gemm,
+                             desim_layer, desim_workload,
+                             epilogue_vector_ops, execute_graph_jax,
+                             execute_workload_jax, exposed_dispatch,
+                             gemm_labels, layer_to_graph, schedule_to_graph,
+                             step_spans, workload_to_graph)
 from repro.sim.trace import chrome_trace, dump_chrome_trace
 
 __all__ = [
@@ -35,9 +36,10 @@ __all__ = [
     "ClusterDESimResult", "DESimResult", "Machine", "build_cluster",
     "simulate_cluster", "simulate_graph",
     "Partition", "STRATEGIES", "partition_graph",
-    "cluster_workload", "desim_gemm", "desim_layer", "desim_workload",
-    "epilogue_vector_ops", "execute_graph_jax", "execute_workload_jax",
-    "exposed_dispatch", "gemm_labels", "layer_to_graph",
+    "OVERLAP_MODES", "cluster_workload", "desim_gemm", "desim_layer",
+    "desim_workload", "epilogue_vector_ops", "execute_graph_jax",
+    "execute_workload_jax", "exposed_dispatch", "gemm_labels",
+    "layer_to_graph", "schedule_to_graph", "step_spans",
     "workload_to_graph",
     "chrome_trace", "dump_chrome_trace",
 ]

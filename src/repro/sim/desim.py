@@ -366,7 +366,16 @@ def simulate_cluster(graph: TaskGraph,
         for succ in dependents[node.nid]:
             remaining[succ.nid] -= 1
             if remaining[succ.nid] == 0:
-                start(succ)
+                ready(succ)
+
+    def ready(node: Node) -> None:
+        # Deps satisfied; the node still waits out its release time (a
+        # request that has not arrived yet cannot enter the machine).
+        if node.release_time > loop.now:
+            loop.after(node.release_time - loop.now,
+                       (lambda nn: lambda: start(nn))(node))
+        else:
+            start(node)
 
     def start(node: Node) -> None:
         started[node.nid] = loop.now
@@ -385,7 +394,8 @@ def simulate_cluster(graph: TaskGraph,
 
     for n in nodes:                      # sources, in program order
         if remaining[n.nid] == 0:
-            loop.after(0.0, (lambda nn: lambda: start(nn))(n))
+            loop.after(max(0.0, n.release_time),
+                       (lambda nn: lambda: start(nn))(n))
 
     loop.run()
     if len(span) != len(nodes):

@@ -62,6 +62,10 @@ class Node:
     deps: "tuple[int, ...]" = ()
     layer: str = ""                   # grouping label for traces
     unit: int = 0                     # matrix unit this node runs on
+    #: earliest simulated cycle this node may start, independent of its
+    #: deps — how request arrival times reach the machine model (a node
+    #: whose deps finish earlier simply waits in the queue until then).
+    release_time: float = 0.0
     # matmul payload
     task: Optional[MatMulTask] = None
     tile: Optional[TileCoord] = None

@@ -24,6 +24,7 @@ output dict, same program order the DES timed.
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Optional
 
 import jax
@@ -94,25 +95,111 @@ def layer_to_graph(unit: MatrixUnitConfig, layer: LayerTrace, *,
     return graph, [vec]
 
 
+#: ``workload_to_graph`` step-chaining modes (see ``overlap=``).
+OVERLAP_MODES = ("chained", "relaxed")
+
+
 def workload_to_graph(unit: MatrixUnitConfig, layers: "list[LayerTrace]", *,
                       fused: bool = True,
                       granularity: Granularity = Granularity.TILE,
                       platform: CpuPlatform = SHUTTLE,
-                      expand_repeat: bool = False) -> TaskGraph:
-    """Chain layers into one TaskGraph (layer i+1 consumes layer i's
-    output, so its tiles depend on layer i's sinks).  ``expand_repeat``
-    instantiates ``layer.repeat`` copies; by default one instance per
-    unique layer is emitted (the DES multiplies, like the analytical
-    model)."""
+                      expand_repeat: bool = False,
+                      overlap: str = "chained",
+                      step_deps: "list[tuple[int, ...]] | None" = None,
+                      release_times: "list[float] | None" = None,
+                      ) -> TaskGraph:
+    """Lower a list of ``LayerTrace`` steps into one TaskGraph.
+
+    :param unit: matrix-unit geometry the GEMMs are tiled for.
+    :param layers: one :class:`~repro.core.simulator.LayerTrace` per
+        schedule step (e.g. a serving ``BatchSchedule.layers``).
+    :param fused: attach per-granularity epilogue vector nodes (Listing
+        1 overlap) instead of one post-GEMM vector phase with the
+        intermediate's DRAM round-trip.
+    :param granularity: how much vector work rides behind each
+        synchronisation point (``TILE`` / ``PANEL`` / ``LAYER``).
+    :param platform: CPU platform (dispatch/check costs, DRAM derate).
+    :param expand_repeat: instantiate ``layer.repeat`` copies of each
+        step; by default one instance per step is emitted (the DES
+        multiplies, like the analytical model).
+    :param overlap: how successive steps are linked.
+
+        * ``"chained"`` (default) — layer *i+1*'s tiles depend on layer
+          *i*'s sinks: the whole schedule is one serial chain, the safe
+          over-approximation every pre-overlap caller used.
+        * ``"relaxed"`` — step *i*'s deps are only the sinks of the
+          steps named by ``step_deps[i]`` (its true data hazards, e.g.
+          the per-request KV/activation chain a
+          :meth:`~repro.serving.engine.BatchSchedule.step_deps`
+          computes).  Steps with no hazard between them carry **no
+          edge**: placed on disjoint units they genuinely run
+          concurrently, and per-unit resource ordering is left to the
+          DES (same-unit steps still serialise on the dispatcher, banks
+          and PE).  Results are unchanged — execution order per GEMM is
+          dependency-driven either way.
+    :param step_deps: per-step dependency lists (indices into
+        ``layers``), required when ``overlap="relaxed"``; each entry may
+        only name earlier steps.
+    :param release_times: per-step earliest-start cycles (request
+        arrival semantics): stamped on every node of the step as
+        :attr:`~repro.sim.graph.Node.release_time`, honoured by the DES
+        and approximated by the analytical backend.  ``None`` means
+        everything is available at t = 0.
+    """
+    if overlap not in OVERLAP_MODES:
+        raise ValueError(f"unknown overlap mode {overlap!r}; one of "
+                         f"{OVERLAP_MODES}")
+    if overlap == "relaxed":
+        if step_deps is None:
+            raise ValueError('overlap="relaxed" needs step_deps (the '
+                             "true cross-step data hazards); use "
+                             "BatchSchedule.step_deps() for schedules")
+        if len(step_deps) != len(layers):
+            raise ValueError(f"{len(step_deps)} step_deps entries for "
+                             f"{len(layers)} steps")
+    if release_times is not None and len(release_times) != len(layers):
+        raise ValueError(f"{len(release_times)} release_times for "
+                         f"{len(layers)} steps")
     graph = TaskGraph()
+    step_sinks: "list[list[int]]" = []
     deps: "list[int]" = []
-    for layer in layers:
+    for i, layer in enumerate(layers):
+        if overlap == "relaxed":
+            deps = []
+            for d in step_deps[i]:
+                if not 0 <= d < i:
+                    raise ValueError(
+                        f"step {i} depends on step {d}; deps must name "
+                        "earlier steps")
+                deps.extend(step_sinks[d])
+        first_nid = len(graph)
         for _ in range(layer.repeat if expand_repeat else 1):
             graph, sinks = layer_to_graph(
                 unit, layer, fused=fused, granularity=granularity,
                 platform=platform, graph=graph, deps=tuple(deps))
             deps = [s.nid for s in sinks]
+        step_sinks.append(list(deps))
+        if release_times is not None and release_times[i] > 0.0:
+            for node in graph.nodes[first_nid:]:
+                node.release_time = release_times[i]
     return graph
+
+
+def schedule_to_graph(unit: MatrixUnitConfig, sched, *,
+                      fused: bool = True,
+                      granularity: Granularity = Granularity.TILE,
+                      platform: CpuPlatform = SHUTTLE) -> TaskGraph:
+    """Lower a serving ``BatchSchedule`` with its own overlap mode,
+    hazard deps and arrival-derived release times — the schedule-aware
+    form of :func:`workload_to_graph` every backend's ``lower()`` uses
+    when handed a schedule instead of bare layers."""
+    overlap = getattr(sched, "overlap", "chained")
+    return workload_to_graph(
+        unit, list(sched.layers), fused=fused, granularity=granularity,
+        platform=platform, overlap=overlap,
+        step_deps=(sched.step_deps() if overlap == "relaxed" else None),
+        release_times=list(getattr(sched, "release_times", ()) or ())
+        or None)
 
 
 # ---------------------------------------------------------------------------
@@ -404,6 +491,35 @@ def cluster_workload(topology, layers: "list[LayerTrace]", *,
         }
 
     return aggregate_cluster_workload(topology, layers, price_layer)
+
+
+_STEP_GEMM_SUFFIX = re.compile(r"/g\d+$")
+
+
+def step_label(node_layer: str) -> str:
+    """Schedule-step name of a graph node's ``layer`` label — the
+    ``LayerTrace.name`` before the per-GEMM ``/g<i>`` suffix
+    ``workload_to_graph`` appends."""
+    return _STEP_GEMM_SUFFIX.sub("", node_layer)
+
+
+def step_spans(graph: TaskGraph, result) -> "dict[str, tuple[float, float]]":
+    """Per-step ``(start, end)`` cycles of a simulated schedule graph.
+
+    Groups ``result.node_span`` (a :class:`~repro.sim.desim.DESimResult`)
+    by :func:`step_label`, so a relaxed-overlap run shows directly which
+    steps the DES actually overlapped — the measurement behind the
+    cross-step-overlap acceptance pins."""
+    out: "dict[str, tuple[float, float]]" = {}
+    for node in graph.nodes:
+        span = result.node_span.get(node.nid)
+        if span is None:
+            continue
+        key = step_label(node.layer)
+        cur = out.get(key)
+        out[key] = span if cur is None else (min(cur[0], span[0]),
+                                             max(cur[1], span[1]))
+    return out
 
 
 def gemm_labels(graph: TaskGraph) -> "list[str]":

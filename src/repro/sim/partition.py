@@ -247,6 +247,7 @@ def partition_graph(graph: TaskGraph, n_units: int,
         deps = tuple(dep_for(d, u) for d in node.deps)
         new = out.add(node.kind, node.name, deps=deps, layer=node.layer,
                       unit=u, task=node.task, tile=node.tile,
+                      release_time=node.release_time,
                       vector_ops=dict(node.vector_ops),
                       epilogue=node.epilogue, mem_bytes=node.mem_bytes)
         remap[node.nid] = new.nid
