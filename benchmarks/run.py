@@ -352,26 +352,39 @@ def bench_cluster():
 # Serving scheduler: batching policies priced on cluster timelines.
 # ---------------------------------------------------------------------------
 
+def serving_queue(n_requests: int = 6, max_batch: int = 2,
+                  arrival_gap: float = 0.0):
+    """The canonical serving bench queue: a yi-6b-reduced engine with
+    ``n_requests`` prompts of 64 + 32·i tokens (deterministic key-0
+    contents), shared by this harness and ``benchmarks/record.py`` so
+    the tracked ``BENCH_serving.json`` prices exactly the workload the
+    CSV bench prints."""
+    import jax
+    from repro.configs.registry import get_config
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config("yi-6b", reduced=True)
+    eng = ServingEngine(cfg, params=None, max_batch=max_batch,
+                        cache_len=256)
+    key = jax.random.PRNGKey(0)
+    for i in range(n_requests):
+        key, sub = jax.random.split(key)
+        eng.submit(jax.random.randint(sub, (64 + 32 * i,), 0,
+                                      cfg.vocab_size),
+                   arrival_time=arrival_gap * i)
+    return cfg, eng
+
+
 def bench_serving():
     """TTFT p50/p99 + inter-token latency + aggregate matrix utilization
     per batching policy on a Llama-style config (yi-6b reduced, 6
     requests), priced by the contention-aware analytical closed form —
     single unit and the ``--units`` cluster (default 2), with both
     chained and relaxed-overlap lowerings on the cluster point."""
-    import jax
-    from repro.configs.registry import get_config
-    from repro.serving.engine import ServingEngine
     from repro.serving.scheduler import (available_policies,
                                          schedule_metrics)
 
-    cfg = get_config("yi-6b", reduced=True)
-    eng = ServingEngine(cfg, params=None, max_batch=2, cache_len=256)
-    key = jax.random.PRNGKey(0)
-    for i in range(6):
-        key, sub = jax.random.split(key)
-        eng.submit(jax.random.randint(sub, (64 + 32 * i,), 0,
-                                      cfg.vocab_size))
-
+    cfg, eng = serving_queue()
     cluster = UNITS if UNITS_SET else 2
     sweep = (1,) if cluster == 1 else (1, cluster)
     policies = [POLICY] if POLICY else list(available_policies()) + ["auto"]

@@ -1,0 +1,128 @@
+"""Regression gate for the tracked BENCH_*.json trajectory.
+
+Compares fresh snapshots (a ``benchmarks/record.py`` run, usually
+``--quick`` in CI) against the committed baselines at the repo root and
+exits non-zero when any ``metrics`` value drifted more than
+``--tolerance`` (default 10%) in the *bad* direction:
+
+* names containing ``util`` / ``eff`` are better-higher — a drop fails;
+* everything else (``makespan``, ``ttft_*``, ``itl_*``, ``cycles``,
+  ``*_seconds``) is better-lower — a rise fails.
+
+Improvements of any size pass (with a note: re-record the baseline to
+bank them).  ``info`` blocks — wall-clock, environment — are never
+compared.  Every fresh entry must exist in the baseline and share its
+``schema_version``; a quick run is a row subset of the full baseline by
+construction, so missing *baseline* entries are fine, missing *fresh*
+ones are not checked (CI only validates what it ran).
+
+Run:  python scripts/check_bench.py --baseline-dir . --fresh-dir /tmp/bench
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BENCH_FILES = ("BENCH_serving.json", "BENCH_cluster.json")
+
+#: metric-name fragments where higher is better (drops regress).
+_HIGHER_BETTER = ("util", "eff")
+
+
+def higher_is_better(name: str) -> bool:
+    return any(frag in name for frag in _HIGHER_BETTER)
+
+
+def compare_doc(base: dict, fresh: dict, tolerance: float,
+                fname: str) -> "tuple[list[str], list[str], int]":
+    """(failures, drift_report_lines, n_compared) for one document pair.
+    Bit-identical metrics count as compared but print no line."""
+    failures: "list[str]" = []
+    lines: "list[str]" = []
+    compared = 0
+    if base.get("schema_version") != fresh.get("schema_version"):
+        failures.append(
+            f"{fname}: schema_version mismatch "
+            f"(baseline {base.get('schema_version')} vs fresh "
+            f"{fresh.get('schema_version')}) — re-record the baseline")
+        return failures, lines, compared
+    for key, entry in sorted(fresh.get("entries", {}).items()):
+        b_entry = base.get("entries", {}).get(key)
+        if b_entry is None:
+            failures.append(
+                f"{fname}: entry {key!r} missing from baseline — "
+                f"re-record to add it")
+            continue
+        for metric, new in sorted(entry.get("metrics", {}).items()):
+            old = b_entry["metrics"].get(metric)
+            if old is None:
+                failures.append(
+                    f"{fname}: {key}: metric {metric!r} missing from "
+                    f"baseline")
+                continue
+            compared += 1
+            if old == new:
+                continue
+            rel = (new - old) / abs(old) if old else float("inf")
+            bad = rel < 0 if higher_is_better(metric) else rel > 0
+            mark = " "
+            if bad and abs(rel) > tolerance:
+                mark = "✗"
+                failures.append(
+                    f"{fname}: {key}: {metric} regressed {rel:+.1%} "
+                    f"({old:.6g} -> {new:.6g}, tolerance {tolerance:.0%})")
+            elif not bad and abs(rel) > tolerance:
+                mark = "+"        # large improvement: bank it
+            lines.append(f"  {mark} {key:<34} {metric:<32} "
+                         f"{old:>14.6g} -> {new:>14.6g}  {rel:+.2%}")
+    return failures, lines, compared
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--fresh-dir", required=True,
+                    help="directory holding the freshly recorded snapshots")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="max bad-direction relative drift (default 0.10)")
+    args = ap.parse_args(argv)
+
+    failures: "list[str]" = []
+    compared = 0
+    for fname in BENCH_FILES:
+        f_path = os.path.join(args.fresh_dir, fname)
+        b_path = os.path.join(args.baseline_dir, fname)
+        if not os.path.exists(f_path):
+            continue                      # that bench wasn't recorded
+        if not os.path.exists(b_path):
+            failures.append(f"{fname}: no committed baseline at {b_path}")
+            continue
+        with open(b_path) as f:
+            base = json.load(f)
+        with open(f_path) as f:
+            fresh = json.load(f)
+        fails, lines, n = compare_doc(base, fresh, args.tolerance, fname)
+        failures.extend(fails)
+        compared += n
+        print(f"{fname}: {n} metrics checked, {len(lines)} drifted")
+        if lines:
+            print("\n".join(lines))
+    if compared == 0 and not failures:
+        failures.append("no BENCH_*.json found in --fresh-dir "
+                        "(did benchmarks/record.py run?)")
+    if failures:
+        print(f"\nFAIL — {len(failures)} problem(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nOK — {compared} metrics within {args.tolerance:.0%} "
+          f"of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

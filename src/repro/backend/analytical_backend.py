@@ -39,6 +39,7 @@ from repro.backend.cluster_backend import PartitionedBackend
 from repro.backend.registry import register
 from repro.core.fusion import Epilogue, NO_EPILOGUE
 from repro.core.task import MatMulTask
+from repro.obs import instrument
 from repro.sim.lower import step_label
 
 #: fixed-point sweeps for the shared-loader slowdown (converges in 2-3).
@@ -77,6 +78,7 @@ class AnalyticalBackend(PartitionedBackend):
             graph = self.partition(graph)
         return lambda: self.run_graph(graph)
 
+    @instrument("run_graph")
     def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
         """Closed-form makespan of a TaskGraph, mirroring the DES pipeline.
 
@@ -251,29 +253,83 @@ class AnalyticalBackend(PartitionedBackend):
                 st["vec"] += topo.vector.cycles_for(node.vector_ops)
                 st["n_vec"] += 1
 
-        cycles = 0.0
-        shared_total = 0.0
-        unit_free = [0.0] * topo.n_units
-        end: "dict[str, float]" = {}
-        spans: "dict[str, tuple[float, float]]" = {}
         detail = {"groups": len(order), "memory": 0.0}
-        for key in order:
-            g = groups[key]
-            shared, unit_times = self._cluster_group_cycles(g, plat)
-            base = max([g["release"]] + [end[d] for d in g["deps"]],
-                       default=0.0)
-            g_end = base
-            for u, tu in unit_times.items():
-                s_u = max(base, unit_free[u])
-                unit_free[u] = s_u + tu
-                g_end = max(g_end, unit_free[u])
-            # pool-capacity floor + serialised transfer traffic.
-            g_end = max(g_end, base + shared) + g["mem"]
-            end[key] = g_end
-            spans[key] = (base, g_end)
-            cycles = max(cycles, g_end)
-            shared_total += shared + g["mem"]
-            detail["memory"] += g["mem"]
+
+        def place(bg: "dict[str, tuple[float, int]]"):
+            """One DAG placement pass; ``bg`` carries each group's
+            concurrent *background* loader traffic (cycles of other
+            groups' shared work inside its window, and how many foreign
+            units contend) into the PS fixed point."""
+            cycles = 0.0
+            shared_total = 0.0
+            mem_total = 0.0
+            unit_free = [0.0] * topo.n_units
+            end: "dict[str, float]" = {}
+            spans: "dict[str, tuple[float, float]]" = {}
+            group_shared: "dict[str, float]" = {}
+            for key in order:
+                g = groups[key]
+                extra, n_bg = bg.get(key, (0.0, 0))
+                shared, unit_times = self._cluster_group_cycles(
+                    g, plat, background=extra, bg_units=n_bg)
+                group_shared[key] = shared
+                base = max([g["release"]] + [end[d] for d in g["deps"]],
+                           default=0.0)
+                g_end = base
+                for u, tu in unit_times.items():
+                    s_u = max(base, unit_free[u])
+                    unit_free[u] = s_u + tu
+                    g_end = max(g_end, unit_free[u])
+                # pool-capacity floor + serialised transfer traffic.
+                g_end = max(g_end, base + shared) + g["mem"]
+                end[key] = g_end
+                spans[key] = (base, g_end)
+                cycles = max(cycles, g_end)
+                shared_total += shared + g["mem"]
+                mem_total += g["mem"]
+            return cycles, shared_total, mem_total, spans, group_shared
+
+        def cross_group_bg(spans, group_shared):
+            """Overlap-weighted background traffic per group from the
+            previous pass's windows: group *h*'s shared work lands in
+            group *g* proportionally to their window overlap.  Empty for
+            any chained schedule (dep-serialised windows never overlap),
+            which keeps those placements bit-identical to the
+            single-pass form."""
+            bg: "dict[str, tuple[float, int]]" = {}
+            for key in order:
+                s0, e0 = spans[key]
+                extra, foreign = 0.0, set()
+                for other in order:
+                    if other == key or group_shared[other] <= 0.0:
+                        continue
+                    s1, e1 = spans[other]
+                    ov = min(e0, e1) - max(s0, s1)
+                    if ov <= 0.0 or e1 <= s1:
+                        continue
+                    extra += group_shared[other] * ov / (e1 - s1)
+                    foreign.update(
+                        u for u, st in groups[other]["units"].items()
+                        if any(t["shared"] for t in st["tiles"]))
+                if extra > 0.0:
+                    bg[key] = (extra, len(foreign))
+            return bg
+
+        # Pass 1 prices every group's fixed point in isolation; when the
+        # relaxed DAG actually overlapped groups, re-derate each group
+        # with the concurrent groups' loader traffic and re-place (the
+        # windows stretch, so one refinement pass re-measures overlap).
+        bg: "dict[str, tuple[float, int]]" = {}
+        cycles, shared_total, mem_total, spans, group_shared = place(bg)
+        for _ in range(2):
+            new_bg = cross_group_bg(spans, group_shared)
+            if not new_bg or new_bg == bg:
+                break
+            bg = new_bg
+            cycles, shared_total, mem_total, spans, group_shared = \
+                place(bg)
+        detail["memory"] = mem_total
+        detail["rederated_groups"] = len(bg)
         detail["loader_utilization"] = (shared_total / cycles
                                         if cycles else 0.0)
         detail["step_spans"] = spans
@@ -287,13 +343,18 @@ class AnalyticalBackend(PartitionedBackend):
             utilization=ideal / (cycles * n) if cycles else 0.0,
             detail=detail)
 
-    def _cluster_group_cycles(self, g: dict,
-                              plat) -> "tuple[float, dict]":
+    def _cluster_group_cycles(self, g: dict, plat, background: float = 0.0,
+                              bg_units: int = 0) -> "tuple[float, dict]":
         """One layer group on the cluster: per-unit streams raced
         concurrently, shared-loader traffic derated by the PS slowdown
         fixed point (the caller applies the pool-capacity floor when
-        placing the group).  Returns ``(shared loader work, per-unit
-        cycles at the converged slowdowns)``."""
+        placing the group).  ``background`` is loader traffic from
+        *other* groups concurrently in flight (cycles of shared work
+        falling inside this group's window, spread over ``bg_units``
+        foreign units) — it joins every unit's ``ρ_other`` and raises
+        the contender cap, so an overlapped relaxed group sees the
+        whole pool's load the way the DES makes it.  Returns ``(shared
+        loader work, per-unit cycles at the converged slowdowns)``."""
         units = g["units"]
         if not units:
             return 0.0, {}
@@ -303,6 +364,8 @@ class AnalyticalBackend(PartitionedBackend):
             for u, st in units.items()}
         total_shared = sum(shared_work.values())
         contenders = [u for u, w in shared_work.items() if w > 0]
+        if background > 0.0 and not contenders:
+            background = 0.0          # no shared traffic to derate
 
         def unit_time(u: int, s: float) -> float:
             st = units[u]
@@ -343,15 +406,18 @@ class AnalyticalBackend(PartitionedBackend):
         t_group = 0.0
         for _ in range(_CONTENTION_ITERS):
             t_group = max(unit_time(u, slow[u]) for u in units)
-            t_group = max(t_group, total_shared)     # pool capacity floor
-            cap = float(max(len(contenders), 1))
+            # pool capacity floor (own + concurrent background traffic).
+            t_group = max(t_group, total_shared + background)
+            cap = float(max(len(contenders) + bg_units, 1))
             for u in contenders:
-                rho_other = (total_shared - shared_work[u]) / t_group
+                rho_other = (total_shared - shared_work[u]
+                             + background) / t_group
                 slow[u] = (min(cap, 1.0 / (1.0 - rho_other))
                            if rho_other < 1.0 else cap)
         unit_times = {u: unit_time(u, slow[u]) for u in units}
         return total_shared, unit_times
 
+    @instrument("run_workload")
     def run_workload(self, layers, *, fused=None, unit=None, platform=None,
                      vector=None):
         fused = self.fused if fused is None else fused

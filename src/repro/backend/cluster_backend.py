@@ -21,6 +21,7 @@ from repro.backend.base import (Backend, ExecResult, GraphOperands,
 from repro.backend.registry import register
 from repro.core.fusion import Epilogue, NO_EPILOGUE
 from repro.core.task import MatMulTask
+from repro.obs import instrument
 from repro.sim.resources import ClusterTopology
 
 
@@ -110,6 +111,7 @@ class ClusterDESimBackend(PartitionedBackend):
         return lambda: self.run_graph(
             part, operands if operands.concrete else None)
 
+    @instrument("run_graph")
     def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
         from repro.sim.desim import simulate_cluster
         from repro.sim.lower import (execute_graph_jax,
@@ -138,6 +140,7 @@ class ClusterDESimBackend(PartitionedBackend):
                               "transfer_bytes": part.transfer_bytes},
             })
 
+    @instrument("run_workload")
     def run_workload(self, layers, *, fused=None, unit=None, platform=None,
                      vector=None):
         from repro.sim.lower import cluster_workload

@@ -17,6 +17,7 @@ from repro.backend.base import (Backend, ExecResult, GraphOperands,
 from repro.backend.registry import register
 from repro.core.fusion import Epilogue, NO_EPILOGUE
 from repro.core.task import MatMulTask
+from repro.obs import instrument
 
 
 @register("desim")
@@ -34,6 +35,7 @@ class DESimBackend(Backend):
         return lambda: self.run_graph(
             graph, operands if operands.concrete else None)
 
+    @instrument("run_graph")
     def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
         from repro.sim.desim import simulate_graph
         from repro.sim.lower import (execute_graph_jax,
@@ -51,6 +53,7 @@ class DESimBackend(Backend):
                           detail={"utilizations": r.utilizations(),
                                   "step_spans": step_spans(graph, r)})
 
+    @instrument("run_workload")
     def run_workload(self, layers, *, fused=None, unit=None, platform=None,
                      vector=None):
         from repro.sim.lower import desim_workload

@@ -18,6 +18,7 @@ from repro.backend.registry import register
 from repro.core.engine import AsyncMatmulEngine
 from repro.core.fusion import Epilogue
 from repro.core.task import MatMulTask
+from repro.obs import instrument
 
 
 class _EagerBackend(Backend):
@@ -42,6 +43,7 @@ class _EagerBackend(Backend):
                                   operands=operands.epilogue)
         return lambda: ExecResult(output=h.force())
 
+    @instrument("run_graph")
     def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
         from repro.sim.lower import execute_graph_jax, execute_workload_jax
         engine = self._engine

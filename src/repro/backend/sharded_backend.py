@@ -22,6 +22,7 @@ from repro.backend.cluster_backend import PartitionedBackend
 from repro.backend.registry import register
 from repro.core.fusion import Epilogue, NO_EPILOGUE
 from repro.core.task import MatMulTask
+from repro.obs import instrument
 
 
 @register("sharded")
@@ -46,6 +47,7 @@ class ShardedBackend(PartitionedBackend):
         part = self.partition(self.lower(task, epilogue=ep))
         return lambda: self.run_graph(part, operands)
 
+    @instrument("run_graph")
     def run_graph(self, graph, operands: GraphOperands = None) -> ExecResult:
         from repro.sim.lower import (_subgraph_for_gemm, gemm_labels,
                                      iter_gemm_operands)

@@ -7,7 +7,13 @@
 backend from the ``repro.backend`` registry before serving: the queue is
 lowered through ``workload_to_graph`` and run on e.g. ``desim`` for a
 per-resource timeline — evaluate a batching policy (``--max-batch``)
-without touching hardware.
+without touching hardware.  The plan ends with a one-screen summary
+table: TTFT/ITL percentiles, makespan, per-unit matrix utilization and
+the request-span audit from the obs subsystem.
+
+``--metrics-out PATH`` switches the process-wide metrics registry on
+(it is off by default everywhere else) and writes its snapshot on exit —
+JSON, or Prometheus text exposition when PATH ends in ``.prom``.
 """
 
 from __future__ import annotations
@@ -21,6 +27,43 @@ import jax.numpy as jnp
 from repro.configs.registry import ALL_ARCHS, get_config
 from repro.models.base import family_module
 from repro.serving.engine import ServingEngine
+
+
+def _plan_summary(stats: dict, res, sched, span_log) -> str:
+    """The one-screen plan scoreboard: latency percentiles, makespan,
+    per-unit matrix utilization, span-chain audit."""
+    rows = [
+        ("policy / overlap", f"{sched.policy} / {sched.overlap}"),
+        ("steps (prefill)",
+         f"{len(sched.steps)} "
+         f"({sum(s.kind == 'prefill' for s in sched.steps)})"),
+        ("TTFT p50 / p99",
+         f"{stats['ttft_p50']:.0f} / {stats['ttft_p99']:.0f} cyc"),
+        ("ITL  p50 / p99",
+         f"{stats['itl_p50']:.0f} / {stats['itl_p99']:.0f} cyc"),
+        ("makespan", f"{stats['makespan']:.0f} cyc"),
+    ]
+    per_unit = {}
+    if res.timeline is not None:
+        for rname, u in res.timeline.utilizations().items():
+            head, _, rest = rname.partition("/")
+            if rest == "pe_array" and head[:1] == "u" and \
+                    head[1:].isdigit():
+                per_unit[int(head[1:])] = u
+    for i in sorted(per_unit):
+        rows.append((f"unit {i} matrix util", f"{per_unit[i]:.1%}"))
+    if not per_unit:
+        rows.append(("matrix util", f"{res.utilization:.1%}"))
+    if span_log is not None:
+        bad = span_log.validate()
+        rows.append(("request spans",
+                     f"{len(span_log)} across "
+                     f"{len(span_log.requests())} requests"
+                     + ("" if not bad else f"  ({len(bad)} VIOLATIONS)")))
+    w = max(len(k) for k, _ in rows)
+    bar = "  " + "-" * (w + 24)
+    body = "\n".join(f"  {k:<{w}}  {v}" for k, v in rows)
+    return f"{bar}\n{body}\n{bar}"
 
 
 def main(argv=None):
@@ -68,7 +111,16 @@ def main(argv=None):
                     help="inter-request arrival gap in cycles: request i "
                          "arrives at i*GAP, so --plan reports TTFT under "
                          "load instead of the all-at-t=0 lower bound")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="enable the obs metrics registry for this run "
+                         "and write its snapshot to PATH on exit (JSON, "
+                         "or Prometheus text when PATH ends in .prom)")
     args = ap.parse_args(argv)
+
+    reg = None
+    if args.metrics_out:
+        from repro.obs import enable_metrics
+        reg = enable_metrics()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.reduced:
@@ -126,6 +178,8 @@ def main(argv=None):
             utils = " ".join(f"{k}={v:.1%}"
                              for k, v in res.timeline.utilizations().items())
             print(f"[plan:{args.plan}] per-resource utilization: {utils}")
+        print(_plan_summary(stats, res, sched,
+                            res.detail.get("span_log")))
     t0 = time.perf_counter()
     outs = eng.run(max_new_tokens=args.max_new,
                    temperature=args.temperature)
@@ -135,6 +189,17 @@ def main(argv=None):
           f"in {dt:.2f}s ({tok / dt:.1f} tok/s)")
     for i, o in enumerate(outs):
         print(f"  req{i}: {list(map(int, o))}")
+    if reg is not None:
+        import json
+        if args.metrics_out.endswith(".prom"):
+            payload = reg.prometheus_text()
+        else:
+            payload = json.dumps(reg.snapshot(), indent=2,
+                                 sort_keys=True) + "\n"
+        with open(args.metrics_out, "w") as f:
+            f.write(payload)
+        reg.disable()
+        print(f"metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

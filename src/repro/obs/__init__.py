@@ -1,0 +1,63 @@
+"""Observability: metrics registry, lifecycle spans, instrumentation.
+
+The measurement spine of the repo (see ``docs/observability.md``):
+
+* :mod:`repro.obs.metrics` — counters / gauges / histograms with
+  ``p50/p90/p99``, JSON-snapshot and Prometheus-text exporters, behind
+  a **disabled-by-default** process registry;
+* :mod:`repro.obs.spans` — per-request lifecycle :class:`SpanLog`
+  (``arrival → admission → prefill(.chunk_j) → decode_iter_k →
+  complete``) joined from a :class:`BatchSchedule` and a priced
+  timeline;
+* :func:`instrument` — the shared decorator the backend wrappers put on
+  ``run_graph`` / ``run_workload``: wall-clock timings into the default
+  registry, one attribute check and a plain call when it is disabled.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               NULL_METRIC, default_registry,
+                               disable_metrics, enable_metrics)
+from repro.obs.spans import Span, SpanLog
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "NULL_METRIC",
+    "Span", "SpanLog", "default_registry", "disable_metrics",
+    "enable_metrics", "instrument",
+]
+
+
+def instrument(section: str, label_attr: str = "name"):
+    """Decorate a backend method with wall-clock timing metrics.
+
+    When the default registry is enabled, each call observes its elapsed
+    seconds into the ``backend_seconds`` histogram and bumps the
+    ``backend_calls_total`` counter, both labeled
+    ``{backend: getattr(self, label_attr), section: section}``.  When it
+    is disabled — the default everywhere outside the serving/bench entry
+    points — the wrapper is a single truthiness check and a plain call,
+    keeping the DES hot path unburdened (the overhead is measured by
+    ``benchmarks/record.py`` and held < 5%).
+    """
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            reg = default_registry()
+            if not reg.enabled:
+                return fn(self, *args, **kwargs)
+            backend = getattr(self, label_attr, type(self).__name__)
+            t0 = time.perf_counter()
+            try:
+                return fn(self, *args, **kwargs)
+            finally:
+                dt = time.perf_counter() - t0
+                reg.histogram("backend_seconds", backend=backend,
+                              section=section).observe(dt)
+                reg.counter("backend_calls_total", backend=backend,
+                            section=section).inc()
+        return wrapper
+    return deco

@@ -259,14 +259,23 @@ def _step_layer(cfg: ArchConfig, name: str, tokens: int,
 
 
 class ServingEngine:
-    """Continuous-batching façade with async prefill dispatch."""
+    """Continuous-batching façade with async prefill dispatch.
+
+    ``metrics`` is the :class:`~repro.obs.metrics.MetricsRegistry` the
+    engine reports into — by default the process registry, which starts
+    *disabled* so planning/pricing pay nothing; serving entry points
+    (``launch/serve.py --metrics-out``, ``benchmarks/record.py``) enable
+    it or pass their own.
+    """
 
     def __init__(self, cfg: ArchConfig, params, max_batch: int = 8,
-                 cache_len: int = 512):
+                 cache_len: int = 512, metrics=None):
+        from repro.obs import default_registry
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
+        self.metrics = metrics if metrics is not None else default_registry()
         self._queue: list = []            # token arrays, submission order
         self._arrivals: "list[float]" = []   # per-request arrival cycles
 
@@ -348,10 +357,22 @@ class ServingEngine:
             if extra:
                 kw["policy_kw"] = {**extra, **kw.get("policy_kw", {})}
             sched, _ = scheduler.select_schedule(ctx, **kw)
+            self._record_plan(sched)
             return sched
         sched = scheduler.get_policy(policy, **policy_kw).schedule(ctx)
         sched.overlap = overlap
+        self._record_plan(sched)
         return sched
+
+    def _record_plan(self, sched) -> None:
+        """Planning counters (no-ops while the registry is disabled)."""
+        m = self.metrics
+        m.counter("serving_plans_total", policy=sched.policy,
+                  overlap=sched.overlap, units=sched.units).inc()
+        m.counter("serving_requests_total", policy=sched.policy).inc(
+            len({r for s in sched.steps for r in s.requests}))
+        m.counter("serving_steps_total", policy=sched.policy).inc(
+            len(sched.steps))
 
     def autoplan(self, max_new_tokens: int = 32, units: int = 1,
                  **select_kw) -> "tuple[BatchSchedule, dict]":
@@ -412,7 +433,31 @@ class ServingEngine:
         result = eng.run_graph(graph, operands)
         if workload:
             result.detail["workload"] = eng.run_workload(sched.layers)
+        spans = result.detail.get("step_spans")
+        if spans is not None and sched.steps:
+            from repro.obs import SpanLog
+            log = SpanLog.from_schedule(sched, spans, self.cfg.n_layers)
+            result.detail["span_log"] = log
+            self._record_spans(log, sched, backend_name)
         return sched, result
+
+    def _record_spans(self, log, sched, backend_name: str) -> None:
+        """Fold a priced run's span log into the metrics registry:
+        per-request TTFT, per-request span counts, the run's makespan."""
+        m = self.metrics
+        if not m.enabled:
+            return
+        labels = dict(policy=sched.policy, backend=backend_name,
+                      units=sched.units, overlap=sched.overlap)
+        ttft = m.histogram("serving_ttft_cycles", **labels)
+        for r in log.requests():
+            try:
+                ttft.observe(log.ttft(r))
+            except KeyError:
+                pass                      # request never decodes
+        m.histogram("serving_request_spans", **labels).observe(len(log))
+        m.gauge("serving_makespan_cycles", **labels).set(
+            max((s.end for s in log.spans), default=0.0))
 
     def run(self, max_new_tokens: int = 32, temperature: float = 0.0):
         """Drain the queue in padded batches; returns list of token arrays."""

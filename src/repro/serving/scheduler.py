@@ -364,17 +364,66 @@ def backend_kwargs_for(sched, default_strategy: str = "output-tile",
     return kw
 
 
+#: memoised per-step prices: a serving sweep re-prices the same
+#: (layer shape × backend config) hundreds of times — decode steps of
+#: one schedule share a shape, and ``select_schedule`` prices every
+#: (policy × strategy × overlap) candidate.  Keyed by the backend's
+#: resolved constructor kwargs and the layer's full cost signature, so
+#: a hit is exact by construction; hit/miss totals land in the obs
+#: registry (``price_cache_{hits,misses}_total``) when it is enabled.
+_PRICE_CACHE: "dict[tuple, dict]" = {}
+_PRICE_CACHE_MAX = 4096
+
+
+def _layer_price_key(lt, sched, backend_name: str, kw: dict) -> tuple:
+    """Cache key of one step's price: everything its cost can depend on.
+    ``LayerTrace``/``MatMulTask`` are dataclasses with content reprs;
+    the step *name* only matters when the partition affinity hints it
+    somewhere, so unhinted same-shape steps share an entry."""
+    hinted = lt.name if lt.name in (sched.affinity or {}) else None
+    return (backend_name, repr(sorted(kw.items())), hinted,
+            tuple(repr(g) for g in lt.gemms),
+            tuple(sorted(lt.vector_ops.items())),
+            lt.intermediate_bytes, lt.repeat)
+
+
+def clear_price_cache() -> None:
+    _PRICE_CACHE.clear()
+
+
 def _price_workloads(sched, backend_name: str,
                      **backend_kwargs) -> "list[dict]":
     """Per-step ``run_workload`` dicts on a modelling backend (repeat
     included) — one pricing pass feeding both the latency timeline and
-    the aggregate utilization."""
+    the aggregate utilization.  Prices are memoised per (backend config
+    × step cost signature); the modelling backends are deterministic,
+    so a hit returns the identical dict."""
     from repro import backend
-    eng = backend.get(backend_name,
-                      **backend_kwargs_for(sched, **backend_kwargs))
-    if not eng.models_time:
-        raise ValueError(f"backend {backend_name!r} does not model time")
-    return [eng.run_workload([lt]) for lt in sched.layers]
+    from repro.obs import default_registry
+    kw = backend_kwargs_for(sched, **backend_kwargs)
+    eng = None
+    reg = default_registry()
+    out: "list[dict]" = []
+    for lt in sched.layers:
+        key = _layer_price_key(lt, sched, backend_name, kw)
+        w = _PRICE_CACHE.get(key)
+        if w is None:
+            reg.counter("price_cache_misses_total",
+                        backend=backend_name).inc()
+            if eng is None:
+                eng = backend.get(backend_name, **kw)
+                if not eng.models_time:
+                    raise ValueError(f"backend {backend_name!r} does not "
+                                     "model time")
+            w = eng.run_workload([lt])
+            if len(_PRICE_CACHE) >= _PRICE_CACHE_MAX:
+                _PRICE_CACHE.clear()
+            _PRICE_CACHE[key] = w
+        else:
+            reg.counter("price_cache_hits_total",
+                        backend=backend_name).inc()
+        out.append(dict(w))
+    return out
 
 
 def price_steps(sched, backend_name: str = "analytical",
@@ -459,6 +508,18 @@ def schedule_timeline(sched,
             free[u] = end[j]
         spans.append((start, end[j]))
     return spans
+
+
+def schedule_spans(sched, step_cycles: "list[float]", n_layers: int):
+    """The per-request lifecycle :class:`~repro.obs.spans.SpanLog` of a
+    priced schedule, placed on the same :func:`schedule_timeline` that
+    :func:`decode_latency_stats` uses — ``arrival → admission →
+    prefill(.chunk_j) → decode_iter_k → complete`` for every request,
+    without running the DES (``evaluate_schedule`` attaches the
+    DES-grounded log under ``result.detail["span_log"]``)."""
+    from repro.obs import SpanLog
+    return SpanLog.from_schedule(sched, schedule_timeline(sched, step_cycles),
+                                 n_layers)
 
 
 def decode_latency_stats(sched, step_cycles: "list[float]",

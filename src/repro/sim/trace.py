@@ -16,6 +16,14 @@ annotates each slice with ``args.phase`` (``prefill`` / ``prefill-chunk``
 / ``decode`` / ``mixed``) and a matching Perfetto colour, so a
 ``chunked-prefill`` or ``decode-priority`` timeline shows exactly where
 decode iterations preempt prefill chunks.
+
+Passing the priced :class:`~repro.serving.engine.BatchSchedule` as
+``schedule=`` adds the request dimension: every serving slice gains
+``args.request`` (the request ids riding that step) and ``args.step``,
+and per request one chain of Perfetto *flow events* (``ph: "s"/"t"/"f"``
+sharing ``id``) links its first slice of every step — so a request's
+journey ``prefill chunk → decode iterations``, across whichever units
+the partitioner placed them on, renders as a clickable arrow chain.
 """
 
 from __future__ import annotations
@@ -69,10 +77,61 @@ def _order(name: str) -> int:
         else len(_RESOURCE_ORDER)
 
 
+def _step_of(label: str, step_names: "list[str]") -> "str | None":
+    """Schedule-step name a node/interval label belongs to: the step
+    whose name prefixes the label at a ``/`` boundary (node names are
+    ``<step>/g<i>/t<r>,<c>`` plus DES suffixes), longest match wins."""
+    best = None
+    for name in step_names:
+        if label == name or label.startswith(name + "/"):
+            if best is None or len(name) > len(best):
+                best = name
+    return best
+
+
+def _flow_events(schedule, slices: "dict[str, list[dict]]",
+                 ) -> "list[dict]":
+    """One flow-event chain per request id: bind to the request's first
+    ``pe_array`` slice (first slice at all as fallback) of each of its
+    steps, in schedule order — ``ph:"s"`` opens the chain, ``"t"`` steps
+    it, ``"f"`` (``bp:"e"``) closes it, all sharing ``id``."""
+    rep: "dict[str, dict]" = {}
+    for name, evs in slices.items():
+        pe = [e for e in evs if e["cat"].endswith("pe_array")]
+        rep[name] = min(pe or evs, key=lambda e: e["ts"])
+    flows: "list[dict]" = []
+    for r in sorted({q for s in schedule.steps for q in s.requests}):
+        chain = [rep[lt.name]
+                 for s, lt in zip(schedule.steps, schedule.layers)
+                 if r in s.requests and lt.name in rep]
+        if len(chain) < 2:
+            continue
+        for i, ev in enumerate(chain):
+            ph = "s" if i == 0 else ("f" if i == len(chain) - 1 else "t")
+            flow = {"name": f"req{r}", "cat": "request", "ph": ph,
+                    "id": r, "pid": ev["pid"], "tid": ev["tid"],
+                    "ts": ev["ts"]}
+            if ph == "f":
+                flow["bp"] = "e"
+            flows.append(flow)
+    return flows
+
+
 def chrome_trace(result: DESimResult, *, process_name: str = "cutev2-desim",
-                 ) -> dict:
-    """Trace Event Format dict: ``{"traceEvents": [...], ...}``."""
+                 schedule=None) -> dict:
+    """Trace Event Format dict: ``{"traceEvents": [...], ...}``.
+
+    ``schedule`` (the priced ``BatchSchedule`` the graph was lowered
+    from) annotates serving slices with their request ids and stitches
+    per-request flow-event chains — see the module docstring."""
     us_per_cycle = 1e6 / result.freq_hz
+    step_names: "list[str]" = []
+    step_requests: "dict[str, list[int]]" = {}
+    slices: "dict[str, list[dict]]" = {}
+    if schedule is not None:
+        step_names = [lt.name for lt in schedule.layers]
+        step_requests = {lt.name: list(s.requests)
+                         for s, lt in zip(schedule.steps, schedule.layers)}
     events = []
     rows = sorted(((_split(r), r) for r in result.intervals),
                   key=lambda x: (x[0][0], _order(x[0][1])))
@@ -100,7 +159,16 @@ def chrome_trace(result: DESimResult, *, process_name: str = "cutev2-desim",
             if phase is not None:
                 ev["args"] = {"phase": phase}
                 ev["cname"] = _PHASE_COLOR[phase]
+            if step_names:
+                step = _step_of(label, step_names)
+                if step is not None:
+                    ev.setdefault("args", {})
+                    ev["args"]["step"] = step
+                    ev["args"]["request"] = step_requests[step]
+                    slices.setdefault(step, []).append(ev)
             events.append(ev)
+    if schedule is not None and slices:
+        events.extend(_flow_events(schedule, slices))
     other = {
         "total_cycles": result.cycles,
         "matrix_utilization": result.matrix_utilization,

@@ -1,0 +1,416 @@
+"""Observability subsystem: metrics registry, lifecycle spans, traces.
+
+Acceptance bars:
+
+* the registry is **off by default** and free when off — instrumented
+  hot paths do zero bookkeeping against a disabled registry;
+* every request submitted to ``ServingEngine`` gets a complete,
+  monotonic ``arrival → admission → work → complete`` span chain from
+  ``evaluate_schedule`` (DES step spans) and from the analytical
+  ``schedule_spans`` timeline, across all policies and overlap modes;
+* ``chrome_trace(schedule=...)`` stitches per-request Perfetto flow
+  chains (``ph: "s"/"t"/"f"``) and stamps ``args.request`` on serving
+  slices — shape-pinned like the per-unit pid test in test_cluster;
+* the scheduler's pricing cache hits on repeated identical layers and
+  never changes priced values;
+* ``decode_latency_stats`` / ``schedule_metrics`` hold up on the queue
+  edge cases (empty, single request, identical arrivals, arrival after
+  the whole drain).
+"""
+
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from repro.configs.registry import get_config
+from repro.core.task import MatMulTask
+from repro.core.simulator import LayerTrace
+from repro.obs import (NULL_METRIC, MetricsRegistry, SpanLog,
+                       default_registry, disable_metrics, enable_metrics)
+from repro.serving.engine import BatchSchedule, BatchStep, ServingEngine
+from repro.serving import scheduler
+from repro.sim.trace import chrome_trace
+
+POLICIES = ("full-prefill", "chunked-prefill", "decode-priority")
+
+
+def _engine(n_requests=4, max_batch=2, arrival_gap=0.0, **kw):
+    cfg = get_config("yi-6b", reduced=True)
+    eng = ServingEngine(cfg, params=None, max_batch=max_batch,
+                        cache_len=64, **kw)
+    key = jax.random.PRNGKey(0)
+    for i in range(n_requests):
+        key, sub = jax.random.split(key)
+        eng.submit(jax.random.randint(sub, (4 + 3 * i,), 0, 100),
+                   arrival_time=arrival_gap * i)
+    return cfg, eng
+
+
+# ---------------------------------------------------------------------------
+# Metrics registry
+# ---------------------------------------------------------------------------
+
+class TestMetricsRegistry:
+    def test_counter_accumulates_per_label_set(self):
+        reg = MetricsRegistry(enabled=True)
+        reg.counter("calls", backend="desim").inc()
+        reg.counter("calls", backend="desim").inc(2)
+        reg.counter("calls", backend="jax").inc()
+        snap = reg.snapshot()
+        by_backend = {e["labels"]["backend"]: e["value"]
+                      for e in snap["counters"]["calls"]}
+        assert by_backend == {"desim": 3, "jax": 1}
+
+    def test_counter_rejects_negative(self):
+        reg = MetricsRegistry(enabled=True)
+        with pytest.raises(ValueError):
+            reg.counter("calls").inc(-1)
+
+    def test_gauge_set_inc_dec(self):
+        reg = MetricsRegistry(enabled=True)
+        g = reg.gauge("depth")
+        g.set(5.0)
+        g.inc(2.0)
+        g.dec()
+        assert reg.snapshot()["gauges"]["depth"][0]["value"] == 6.0
+
+    def test_histogram_percentiles(self):
+        reg = MetricsRegistry(enabled=True)
+        h = reg.histogram("lat")
+        for v in range(1, 101):
+            h.observe(float(v))
+        s = reg.snapshot()["histograms"]["lat"][0]
+        assert s["count"] == 100
+        assert s["min"] == 1.0 and s["max"] == 100.0
+        assert s["p50"] == 50.0 and s["p90"] == 90.0 and s["p99"] == 99.0
+
+    def test_kind_conflict_rejected(self):
+        reg = MetricsRegistry(enabled=True)
+        reg.counter("x").inc()
+        with pytest.raises(ValueError):
+            reg.gauge("x")
+
+    def test_disabled_registry_returns_null_metric(self):
+        reg = MetricsRegistry(enabled=False)
+        m = reg.counter("calls", backend="desim")
+        assert m is NULL_METRIC
+        m.inc()          # all mutators pass silently
+        m.observe(1.0)
+        m.set(2.0)
+        assert reg.snapshot()["counters"] == {}
+
+    def test_prometheus_text_format(self):
+        reg = MetricsRegistry(enabled=True)
+        reg.counter("calls_total", backend="desim").inc(3)
+        reg.histogram("lat_cycles", policy="auto").observe(10.0)
+        text = reg.prometheus_text()
+        assert "# TYPE calls_total counter" in text
+        assert 'calls_total{backend="desim"} 3' in text
+        assert "# TYPE lat_cycles summary" in text
+        assert 'lat_cycles_count{policy="auto"} 1' in text
+        assert 'quantile="0.50"' in text
+
+    def test_timer_observes_histogram(self):
+        reg = MetricsRegistry(enabled=True)
+        with reg.timer("op_seconds", section="x"):
+            pass
+        s = reg.snapshot()["histograms"]["op_seconds"][0]
+        assert s["count"] == 1 and s["min"] >= 0.0
+
+    def test_default_registry_toggle(self):
+        assert default_registry().enabled is False, \
+            "metrics must be off by default"
+        try:
+            assert enable_metrics() is default_registry()
+            assert default_registry().enabled
+        finally:
+            disable_metrics()
+        assert not default_registry().enabled
+
+
+class TestInstrumentation:
+    def test_disabled_path_records_nothing(self):
+        from repro import backend
+        disable_metrics()
+        eng = backend.get("analytical")
+        eng.run_graph(eng.lower(MatMulTask(m=64, n=64, k=64)))
+        assert default_registry().snapshot()["histograms"] == {}
+
+    def test_enabled_path_times_backend_sections(self):
+        from repro import backend
+        reg = enable_metrics()
+        try:
+            eng = backend.get("analytical")
+            eng.run_graph(eng.lower(MatMulTask(m=64, n=64, k=64)))
+            snap = reg.snapshot()
+        finally:
+            disable_metrics()
+            reg.clear()
+        entries = snap["histograms"]["backend_seconds"]
+        labels = {(e["labels"]["backend"], e["labels"]["section"])
+                  for e in entries}
+        assert ("analytical", "run_graph") in labels
+        calls = snap["counters"]["backend_calls_total"]
+        assert any(e["value"] >= 1 for e in calls)
+
+
+# ---------------------------------------------------------------------------
+# Request-lifecycle spans
+# ---------------------------------------------------------------------------
+
+class TestSpanLog:
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("overlap", ("chained", "relaxed"))
+    def test_evaluate_schedule_attaches_complete_chains(self, policy,
+                                                       overlap):
+        _, eng = _engine(arrival_gap=500.0)
+        sched, res = eng.evaluate_schedule(
+            "desim-cluster", max_new_tokens=4, units=2, policy=policy,
+            overlap=overlap, strategy="unit-affinity", workload=False)
+        log = res.detail["span_log"]
+        assert isinstance(log, SpanLog)
+        assert log.validate() == []
+        assert list(log.requests()) == sorted(
+            {r for s in sched.steps for r in s.requests})
+        for r in log.requests():
+            phases = [s.phase for s in log.for_request(r)]
+            assert phases[0] == "arrival"
+            assert phases[1] == "admission"
+            assert phases[-1] == "complete"
+            assert any(p.startswith("decode_iter") for p in phases)
+
+    def test_arrival_and_ttft_semantics(self):
+        _, eng = _engine(n_requests=3, arrival_gap=1000.0)
+        sched, res = eng.evaluate_schedule(
+            "desim", max_new_tokens=4, policy="full-prefill",
+            workload=False)
+        log = res.detail["span_log"]
+        for r in log.requests():
+            arr = log.for_request(r)[0]
+            assert arr.start == pytest.approx(1000.0 * r)
+            assert log.ttft(r) > 0.0
+
+    def test_analytical_schedule_spans_match_latency_stats(self):
+        cfg, eng = _engine(arrival_gap=200.0)
+        sched = eng.plan(max_new_tokens=4, policy="chunked-prefill")
+        cycles = scheduler.price_steps(sched)
+        log = scheduler.schedule_spans(sched, cycles, cfg.n_layers)
+        stats = scheduler.decode_latency_stats(sched, cycles, cfg.n_layers)
+        assert log.validate() == []
+        ttfts = sorted(log.ttft(r) for r in log.requests())
+        assert scheduler._percentile(ttfts, 50.0) == \
+            pytest.approx(stats["ttft_p50"])
+        makespan = max(log.phase(r, "complete").end
+                       for r in log.requests())
+        assert makespan == pytest.approx(stats["makespan"])
+
+    def test_chunked_prefill_names_chunks(self):
+        cfg, eng = _engine(n_requests=6, max_batch=3)
+        sched = eng.plan(max_new_tokens=2, policy="chunked-prefill",
+                         chunk_tokens=4)
+        cycles = scheduler.price_steps(sched)
+        log = scheduler.schedule_spans(sched, cycles, cfg.n_layers)
+        chunk_phases = {s.phase for s in log
+                        if s.phase.startswith("prefill.chunk")}
+        assert chunk_phases, "chunked prefill must emit per-chunk spans"
+
+    def test_json_round_trip(self):
+        cfg, eng = _engine()
+        sched = eng.plan(max_new_tokens=2)
+        log = scheduler.schedule_spans(
+            sched, scheduler.price_steps(sched), cfg.n_layers)
+        doc = json.loads(json.dumps(log.to_json()))
+        assert len(doc) == len(log)
+        for rec in doc:
+            assert set(rec) >= {"request", "phase", "start", "end"}
+            assert rec["end"] >= rec["start"]
+        work = [rec for rec in doc if rec["phase"].startswith(
+            ("prefill", "decode"))]
+        assert all({"step", "label", "kind"} <= set(rec) for rec in work)
+
+    def test_validate_flags_missing_phases(self):
+        from repro.obs.spans import Span
+        log = SpanLog([Span(0, "prefill", 5.0, 9.0)])
+        bad = log.validate()
+        assert any("arrival" in v for v in bad)
+        assert any("complete" in v for v in bad)
+
+
+# ---------------------------------------------------------------------------
+# Perfetto flow events
+# ---------------------------------------------------------------------------
+
+class TestFlowEvents:
+    @pytest.fixture(scope="class")
+    def traced(self):
+        _, eng = _engine()
+        sched, res = eng.evaluate_schedule(
+            "desim-cluster", max_new_tokens=4, units=2,
+            policy="decode-priority", overlap="relaxed",
+            strategy="unit-affinity", workload=False)
+        return sched, chrome_trace(res.timeline, schedule=sched)
+
+    def test_serving_slices_carry_request_ids(self, traced):
+        sched, doc = traced
+        xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        tagged = [e for e in xs if "request" in e.get("args", {})]
+        assert tagged, "no slice carries args.request"
+        valid = {r for s in sched.steps for r in s.requests}
+        for e in tagged:
+            assert set(e["args"]["request"]) <= valid
+            assert e["args"]["step"] in {lt.name for lt in sched.layers}
+
+    def test_flow_chain_shape_per_request(self, traced):
+        sched, doc = traced
+        flows = [e for e in doc["traceEvents"]
+                 if e.get("cat") == "request"]
+        assert flows, "no flow events emitted"
+        by_id = {}
+        for e in flows:
+            by_id.setdefault(e["id"], []).append(e)
+        for rid, chain in by_id.items():
+            phs = [e["ph"] for e in chain]
+            assert phs[0] == "s" and phs[-1] == "f"
+            assert all(p == "t" for p in phs[1:-1])
+            assert chain[-1]["bp"] == "e"
+            assert all(e["name"] == f"req{rid}" for e in chain)
+            ts = [e["ts"] for e in chain]
+            assert ts == sorted(ts)
+
+    def test_flow_ids_cover_multi_step_requests(self, traced):
+        sched, doc = traced
+        flow_ids = {e["id"] for e in doc["traceEvents"]
+                    if e.get("cat") == "request"}
+        multi = {r for r in
+                 {q for s in sched.steps for q in s.requests}
+                 if sum(r in s.requests for s in sched.steps) >= 2}
+        assert flow_ids == multi
+
+    def test_trace_without_schedule_unchanged(self):
+        _, eng = _engine(n_requests=2)
+        _, res = eng.evaluate_schedule("desim", max_new_tokens=2,
+                                       workload=False)
+        doc = chrome_trace(res.timeline)
+        assert all(e.get("cat") != "request" for e in doc["traceEvents"])
+        assert all("request" not in e.get("args", {})
+                   for e in doc["traceEvents"])
+
+
+# ---------------------------------------------------------------------------
+# Pricing cache
+# ---------------------------------------------------------------------------
+
+class TestPriceCache:
+    def test_identical_layers_hit_and_values_stable(self):
+        scheduler.clear_price_cache()
+        _, eng = _engine(n_requests=6, max_batch=2)
+        sched = eng.plan(max_new_tokens=4)
+        reg = enable_metrics()
+        try:
+            cold = scheduler.price_steps(sched)
+            warm = scheduler.price_steps(sched)
+            snap = reg.snapshot()
+        finally:
+            disable_metrics()
+            reg.clear()
+        assert warm == cold
+        hits = sum(e["value"]
+                   for e in snap["counters"]["price_cache_hits_total"])
+        misses = sum(e["value"]
+                     for e in snap["counters"]["price_cache_misses_total"])
+        assert misses >= 1
+        assert hits >= len(sched.steps), \
+            "second pricing pass must be all cache hits"
+
+    def test_cache_key_respects_units(self):
+        scheduler.clear_price_cache()
+        _, eng = _engine()
+        s1 = eng.plan(max_new_tokens=2, units=1)
+        s2 = eng.plan(max_new_tokens=2, units=2)
+        c1 = scheduler.price_steps(s1)
+        c2 = scheduler.price_steps(s2)
+        assert c1 != c2, "unit count must reach the cache key"
+
+
+# ---------------------------------------------------------------------------
+# Latency-stat edge cases
+# ---------------------------------------------------------------------------
+
+def _tiny_sched(steps, arrivals=(), **kw):
+    layers = [LayerTrace(name=f"s{i}", gemms=(MatMulTask(m=4, n=8, k=8),),
+                         repeat=s.repeat)
+              for i, s in enumerate(steps)]
+    rel = tuple(max((arrivals[r] for r in s.requests), default=0.0)
+                for s in steps) if arrivals else ()
+    return BatchSchedule(steps=list(steps), layers=layers,
+                         arrival_times=tuple(arrivals),
+                         release_times=rel, **kw)
+
+
+class TestLatencyEdgeCases:
+    def test_empty_queue(self):
+        sched = _tiny_sched([])
+        stats = scheduler.decode_latency_stats(sched, [], 2)
+        assert stats["makespan"] == 0.0
+        assert stats["ttft_p50"] == 0.0 and stats["itl_p99"] == 0.0
+        assert stats["decode_tokens"] == 0.0
+        log = scheduler.schedule_spans(sched, [], 2)
+        assert len(log) == 0 and log.validate() == []
+
+    def test_empty_queue_plan_and_metrics(self):
+        cfg, eng = _engine(n_requests=0)
+        sched = eng.plan(max_new_tokens=4)
+        assert sched.steps == []
+        stats = scheduler.schedule_metrics(sched, cfg.n_layers)
+        assert stats["workload_cycles"] == 0.0
+        assert stats["matrix_utilization"] == 0.0
+
+    def test_single_request(self):
+        steps = [BatchStep("prefill", (0,), tokens=8, repeat=2),
+                 BatchStep("decode", (0,), tokens=1, repeat=8)]
+        sched = _tiny_sched(steps)
+        stats = scheduler.decode_latency_stats(sched, [100.0, 400.0], 2)
+        # 4 decode iterations across (100, 500): first token at 200.
+        assert stats["ttft_p50"] == pytest.approx(200.0)
+        assert stats["ttft_p99"] == stats["ttft_p50"]
+        assert stats["itl_p50"] == pytest.approx(100.0)
+        assert stats["makespan"] == pytest.approx(500.0)
+        log = scheduler.schedule_spans(sched, [100.0, 400.0], 2)
+        assert log.validate() == []
+        assert log.ttft(0) == pytest.approx(200.0)
+
+    def test_all_arrivals_identical(self):
+        steps = [BatchStep("prefill", (0, 1), tokens=8, repeat=2),
+                 BatchStep("decode", (0, 1), tokens=2, repeat=4)]
+        sched = _tiny_sched(steps, arrivals=(300.0, 300.0))
+        stats = scheduler.decode_latency_stats(sched, [100.0, 200.0], 2)
+        # release waits for t=300, prefill ends 400, both tokens at 500
+        # (single iteration): identical TTFT = 200 for both requests.
+        assert stats["ttft_p50"] == pytest.approx(200.0)
+        assert stats["ttft_p99"] == pytest.approx(200.0)
+        assert stats["makespan"] == pytest.approx(600.0)
+
+    def test_arrival_after_makespan_of_others(self):
+        # request 1 arrives after request 0's whole drain would end.
+        steps = [BatchStep("prefill", (0,), tokens=8, repeat=2),
+                 BatchStep("decode", (0,), tokens=1, repeat=2),
+                 BatchStep("prefill", (1,), tokens=8, repeat=2),
+                 BatchStep("decode", (1,), tokens=1, repeat=2)]
+        sched = _tiny_sched(steps, arrivals=(0.0, 10_000.0))
+        cycles = [100.0, 50.0, 100.0, 50.0]
+        stats = scheduler.decode_latency_stats(sched, cycles, 2)
+        # idle gap: r1's prefill starts at its arrival, not at r0's end.
+        assert stats["makespan"] == pytest.approx(10_150.0)
+        assert stats["ttft_p50"] == pytest.approx(150.0)
+        log = scheduler.schedule_spans(sched, cycles, 2)
+        assert log.validate() == []
+        arr1 = log.for_request(1)[0]
+        assert arr1.start == pytest.approx(10_000.0)
+        assert log.ttft(1) == pytest.approx(150.0)
+
+    def test_length_mismatch_rejected(self):
+        sched = _tiny_sched([BatchStep("decode", (0,), tokens=1, repeat=2)])
+        with pytest.raises(ValueError):
+            scheduler.decode_latency_stats(sched, [1.0, 2.0], 2)
