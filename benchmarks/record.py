@@ -6,7 +6,10 @@ writes schema-versioned JSON snapshots meant to be **committed**:
 * ``BENCH_serving.json`` — the serving queue (``run.serving_queue``)
   priced by the contention-aware analytical closed form, one entry per
   ``policy|u<units>|<overlap>``: makespan, TTFT/ITL percentiles,
-  aggregate matrix utilization.
+  aggregate matrix utilization.  Plus the **online closed-loop** rows
+  (``online|policy|q<qps>``: sustained-load TTFT/ITL/goodput under
+  seeded Poisson traffic; ``online-sat|policy``: the saturation knee),
+  so CI gates online-serving drift too.
 * ``BENCH_cluster.json`` — DES weak scaling on the paper GEMM regime
   (512 rows × 512 × 8192 per unit, int8): aggregate utilization, loader
   utilization, scaling efficiency per unit count.
@@ -50,6 +53,25 @@ CLUSTER_UNITS = [(1, True), (2, True), (4, False)]
 SERVING_METRICS = ("makespan", "ttft_p50", "ttft_p99", "itl_p50",
                    "itl_p99", "matrix_utilization", "workload_cycles")
 
+#: online closed-loop sustained-load points: (policy, offered qps,
+#: in_quick).  Fixed-seed Poisson traffic + analytical epoch execution
+#: (benchmarks.run.ONLINE_TRAFFIC/ONLINE_ENGINE), so values are
+#: deterministic and the --quick row gates online-serving drift in CI.
+ONLINE_POINTS = [
+    ("full-prefill", 2e4, True),
+    ("full-prefill", 2e5, False),
+    ("chunked-prefill", 2e4, False),
+    ("decode-priority", 2e4, False),
+]
+
+#: saturation-knee rows per policy (full runs only — each is a
+#: geometric sweep of closed-loop runs).
+ONLINE_SATURATION = ["full-prefill", "chunked-prefill",
+                     "decode-priority"]
+
+ONLINE_METRICS = ("ttft_p50", "ttft_p99", "itl_p50", "itl_p99",
+                  "goodput_qps", "makespan", "preemptions")
+
 
 def record_serving(quick: bool) -> dict:
     from benchmarks.run import serving_queue
@@ -69,14 +91,61 @@ def record_serving(quick: bool) -> dict:
             "metrics": {k: m[k] for k in SERVING_METRICS},
             "info": {"wall_s": round(wall, 4), "steps": len(sched.steps)},
         }
+    entries.update(record_online(quick))
     return {
         "schema_version": SCHEMA_VERSION,
         "bench": "serving",
         "config": {"model": "yi-6b-reduced", "n_requests": 6,
                    "max_batch": 2, "max_new_tokens": 16,
-                   "backend": "analytical"},
+                   "backend": "analytical",
+                   "online": {"traffic": "poisson seed=0",
+                              "execute_backend": "analytical",
+                              "max_new_tokens": 8}},
         "entries": entries,
     }
+
+
+def record_online(quick: bool) -> "dict[str, dict]":
+    """The closed-loop sustained-load rows: one entry per
+    (policy × offered QPS) point plus a saturation-knee entry per
+    policy (full runs only).  Deterministic by construction — seeded
+    Poisson arrivals, analytical epoch execution — so
+    ``scripts/check_bench.py`` gates them exactly like the offline
+    rows."""
+    from benchmarks.run import ONLINE_ENGINE, ONLINE_TRAFFIC
+    from repro.configs.registry import get_config
+    from repro.serving.online import find_saturation, qps_sweep
+
+    cfg = get_config("yi-6b", reduced=True)
+    entries: "dict[str, dict]" = {}
+    for policy, qps, in_quick in ONLINE_POINTS:
+        if quick and not in_quick:
+            continue
+        t0 = time.perf_counter()
+        row = qps_sweep(cfg, [qps], policy=policy,
+                        **ONLINE_TRAFFIC, **ONLINE_ENGINE)[0]
+        wall = time.perf_counter() - t0
+        entries[f"online|{policy}|q{qps:.0e}"] = {
+            "metrics": {k: row[k] for k in ONLINE_METRICS},
+            "info": {"wall_s": round(wall, 4),
+                     "epochs": row["epochs"],
+                     "completed": row["completed"]},
+        }
+    if not quick:
+        for policy in ONLINE_SATURATION:
+            t0 = time.perf_counter()
+            sat = find_saturation(cfg, start_qps=1e4, factor=4.0,
+                                  max_points=6, policy=policy,
+                                  **ONLINE_TRAFFIC, **ONLINE_ENGINE)
+            wall = time.perf_counter() - t0
+            entries[f"online-sat|{policy}"] = {
+                "metrics": {"knee_qps": sat["knee_qps"],
+                            "peak_goodput_qps": sat["peak_goodput_qps"]},
+                "info": {"wall_s": round(wall, 4),
+                         "saturated": sat["saturated"],
+                         "points": len(sat["points"])},
+            }
+    return entries
 
 
 def record_cluster(quick: bool) -> dict:

@@ -375,19 +375,26 @@ def serving_queue(n_requests: int = 6, max_batch: int = 2,
     return cfg, eng
 
 
+def concrete_policies() -> "list[str]":
+    """Registered non-meta batching policies — the sweepable set
+    (``auto-slo`` wraps the sweep itself and is benched separately by
+    the online loop)."""
+    from repro.serving.scheduler import POLICIES
+    return [n for n, c in POLICIES.items() if not getattr(c, "meta", False)]
+
+
 def bench_serving():
     """TTFT p50/p99 + inter-token latency + aggregate matrix utilization
     per batching policy on a Llama-style config (yi-6b reduced, 6
     requests), priced by the contention-aware analytical closed form —
     single unit and the ``--units`` cluster (default 2), with both
     chained and relaxed-overlap lowerings on the cluster point."""
-    from repro.serving.scheduler import (available_policies,
-                                         schedule_metrics)
+    from repro.serving.scheduler import schedule_metrics
 
     cfg, eng = serving_queue()
     cluster = UNITS if UNITS_SET else 2
     sweep = (1,) if cluster == 1 else (1, cluster)
-    policies = [POLICY] if POLICY else list(available_policies()) + ["auto"]
+    policies = [POLICY] if POLICY else concrete_policies() + ["auto"]
     for pol in policies:
         for u in sweep:
             # chained on one unit (relaxed buys nothing there); both
@@ -412,6 +419,51 @@ def bench_serving():
                      f"itl_p50={m['itl_p50']:.0f} "
                      f"agg_matrix_util={m['matrix_utilization']:.3f} "
                      f"makespan={m['makespan']:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Online closed-loop serving: sustained-load QPS sweep + saturation knee.
+# ---------------------------------------------------------------------------
+
+#: the canonical online-bench traffic shape (fixed-seed Poisson over the
+#: serving queue's prompt lengths) — shared with ``benchmarks/record.py``
+#: so the tracked rows price exactly what this CSV bench prints.
+ONLINE_TRAFFIC = dict(n_requests=6, seed=0, prompt_lengths=(64, 96, 128))
+ONLINE_ENGINE = dict(max_batch=2, max_new_tokens=8,
+                     execute_backend="analytical")
+
+
+def bench_online():
+    """Closed-loop sustained load per policy: offered-QPS sweep (TTFT /
+    ITL / goodput curves) plus the saturation sweep locating where each
+    policy's goodput collapses (``repro.serving.online``).  Fixed-seed
+    Poisson arrivals, analytical epoch execution — deterministic and
+    fast enough for CI; ``--policy`` restricts the sweep."""
+    from repro.configs.registry import get_config
+    from repro.serving.online import find_saturation, qps_sweep
+
+    cfg = get_config("yi-6b", reduced=True)
+    policies = ([POLICY] if POLICY and POLICY != "auto"
+                else concrete_policies())
+    for pol in policies:
+        rows, us = timed(lambda pol=pol: qps_sweep(
+            cfg, [1e4, 1e5, 1e6], policy=pol,
+            **ONLINE_TRAFFIC, **ONLINE_ENGINE))
+        for r in rows:
+            emit(f"online_{pol}_q{r['offered_qps']:.0e}", us / len(rows),
+                 f"ttft_p50={r['ttft_p50']:.0f} "
+                 f"ttft_p99={r['ttft_p99']:.0f} "
+                 f"itl_p50={r['itl_p50']:.0f} "
+                 f"goodput={r['goodput_qps']:.0f}req/s "
+                 f"epochs={r['epochs']:.0f} "
+                 f"preempt={r['preemptions']:.0f}")
+        sat, us = timed(lambda pol=pol: find_saturation(
+            cfg, start_qps=1e4, factor=4.0, max_points=6, policy=pol,
+            **ONLINE_TRAFFIC, **ONLINE_ENGINE))
+        emit(f"online_{pol}_saturation", us,
+             f"knee_qps={sat['knee_qps']:.0f} "
+             f"peak_goodput={sat['peak_goodput_qps']:.0f}req/s "
+             f"saturated={sat['saturated']}")
 
 
 # ---------------------------------------------------------------------------
@@ -495,6 +547,7 @@ BENCHES = {
     "desim": bench_desim,
     "cluster": bench_cluster,
     "serving": bench_serving,
+    "online": bench_online,
     "table7": bench_table7_area,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
@@ -520,8 +573,9 @@ def main() -> None:
     ap.add_argument("--policy", default=None,
                     choices=("full-prefill", "chunked-prefill",
                              "decode-priority", "auto"),
-                    help="restrict the serving bench to one batching "
-                         "policy (default: sweep all + auto)")
+                    help="restrict the serving/online benches to one "
+                         "batching policy (default: sweep all concrete "
+                         "policies + auto)")
     args = ap.parse_args()
     from repro import backend
     try:

@@ -5,9 +5,11 @@ Compares fresh snapshots (a ``benchmarks/record.py`` run, usually
 exits non-zero when any ``metrics`` value drifted more than
 ``--tolerance`` (default 10%) in the *bad* direction:
 
-* names containing ``util`` / ``eff`` are better-higher — a drop fails;
+* names containing ``util`` / ``eff`` / ``goodput`` / ``qps`` are
+  better-higher — a drop fails (goodput and saturation-knee QPS come
+  from the online sustained-load rows);
 * everything else (``makespan``, ``ttft_*``, ``itl_*``, ``cycles``,
-  ``*_seconds``) is better-lower — a rise fails.
+  ``*_seconds``, ``preemptions``) is better-lower — a rise fails.
 
 Improvements of any size pass (with a note: re-record the baseline to
 bank them).  ``info`` blocks — wall-clock, environment — are never
@@ -29,7 +31,7 @@ import sys
 BENCH_FILES = ("BENCH_serving.json", "BENCH_cluster.json")
 
 #: metric-name fragments where higher is better (drops regress).
-_HIGHER_BETTER = ("util", "eff")
+_HIGHER_BETTER = ("util", "eff", "goodput", "qps")
 
 
 def higher_is_better(name: str) -> bool:

@@ -29,6 +29,44 @@ from repro.models.base import family_module
 from repro.serving.engine import ServingEngine
 
 
+def _table(rows: "list[tuple[str, str]]") -> str:
+    w = max(len(k) for k, _ in rows)
+    bar = "  " + "-" * (w + 24)
+    body = "\n".join(f"  {k:<{w}}  {v}" for k, v in rows)
+    return f"{bar}\n{body}\n{bar}"
+
+
+def _span_audit_row(span_log) -> "tuple[str, str]":
+    bad = span_log.validate()
+    return ("request spans",
+            f"{len(span_log)} across {len(span_log.requests())} requests"
+            + ("" if not bad else f"  ({len(bad)} VIOLATIONS)"))
+
+
+def _online_summary(res, policy: str, slo_cycles) -> str:
+    """The closed-loop scoreboard: the plan table's latency rows plus
+    the online-only goodput / preemption / eviction counters."""
+    s = res.summary(slo_cycles)
+    rows = [
+        ("policy", policy),
+        ("requests (completed)",
+         f"{len(res.requests)} ({len(res.completed())})"),
+        ("admission epochs", f"{len(res.epochs)}"),
+        ("TTFT p50 / p99",
+         f"{s['ttft_p50']:.0f} / {s['ttft_p99']:.0f} cyc"),
+        ("ITL  p50 / p99",
+         f"{s['itl_p50']:.0f} / {s['itl_p99']:.0f} cyc"),
+        ("makespan", f"{s['makespan']:.0f} cyc"),
+        ("goodput", f"{s['goodput_qps']:.0f} req/s"
+         + ("" if slo_cycles is None
+            else f" (TTFT p99 SLO {slo_cycles:.0f} cyc)")),
+        ("preemptions / evictions",
+         f"{res.n_preemptions} / {res.n_evictions}"),
+        _span_audit_row(res.span_log),
+    ]
+    return _table(rows)
+
+
 def _plan_summary(stats: dict, res, sched, span_log) -> str:
     """The one-screen plan scoreboard: latency percentiles, makespan,
     per-unit matrix utilization, span-chain audit."""
@@ -55,15 +93,60 @@ def _plan_summary(stats: dict, res, sched, span_log) -> str:
     if not per_unit:
         rows.append(("matrix util", f"{res.utilization:.1%}"))
     if span_log is not None:
-        bad = span_log.validate()
-        rows.append(("request spans",
-                     f"{len(span_log)} across "
-                     f"{len(span_log.requests())} requests"
-                     + ("" if not bad else f"  ({len(bad)} VIOLATIONS)")))
-    w = max(len(k) for k, _ in rows)
-    bar = "  " + "-" * (w + 24)
-    body = "\n".join(f"  {k:<{w}}  {v}" for k, v in rows)
-    return f"{bar}\n{body}\n{bar}"
+        rows.append(_span_audit_row(span_log))
+    return _table(rows)
+
+
+def _write_metrics(reg, path: str) -> None:
+    import json
+    if path.endswith(".prom"):
+        payload = reg.prometheus_text()
+    else:
+        payload = json.dumps(reg.snapshot(), indent=2,
+                             sort_keys=True) + "\n"
+    with open(path, "w") as f:
+        f.write(payload)
+    reg.disable()
+    print(f"metrics snapshot -> {path}")
+
+
+def _run_online(args, cfg, reg) -> None:
+    """The ``--qps`` / ``--arrival-trace`` closed-loop path: streaming
+    admission + per-epoch re-planning on the modelling backends (no
+    weights are instantiated — this is the planning loop, grounded on
+    the DES execution path)."""
+    from repro.core.config import CASE_STUDY
+    from repro.serving.arrivals import (PoissonArrivals, TraceArrivals,
+                                        qps_to_gap)
+    from repro.serving.online import OnlineServingEngine
+    freq = CASE_STUDY.freq_hz
+    slo = (None if args.slo_ttft_p99_ms is None
+           else args.slo_ttft_p99_ms * 1e-3 * freq)
+    if args.arrival_trace is not None:
+        src = TraceArrivals(args.arrival_trace)
+        offered = "trace"
+    else:
+        src = PoissonArrivals(mean_gap=qps_to_gap(args.qps, freq),
+                              n=args.requests, seed=0)
+        offered = f"{args.qps:.0f} req/s"
+    execute = args.plan or "desim"
+    try:
+        eng = OnlineServingEngine(
+            cfg, max_batch=args.max_batch, max_new_tokens=args.max_new,
+            units=args.plan_units, policy=args.policy,
+            overlap=args.overlap, execute_backend=execute,
+            ttft_p99_slo=slo, metrics=reg)
+        t0 = time.perf_counter()
+        res = eng.run(src)
+        dt = time.perf_counter() - t0
+    except (KeyError, ValueError, OSError) as e:
+        raise SystemExit(f"online serving: {e}")
+    print(f"[online:{execute}] offered={offered} policy={args.policy}: "
+          f"{len(res.completed())}/{len(res.requests)} requests over "
+          f"{len(res.epochs)} admission epochs in {dt:.2f}s wall")
+    print(_online_summary(res, args.policy, slo))
+    if reg is not None and args.metrics_out:
+        _write_metrics(reg, args.metrics_out)
 
 
 def main(argv=None):
@@ -111,6 +194,22 @@ def main(argv=None):
                     help="inter-request arrival gap in cycles: request i "
                          "arrives at i*GAP, so --plan reports TTFT under "
                          "load instead of the all-at-t=0 lower bound")
+    ap.add_argument("--qps", type=float, default=None,
+                    help="run the ONLINE closed loop instead of the "
+                         "offline plan: seeded Poisson arrivals at this "
+                         "offered requests/second rate feed streaming "
+                         "admission + per-epoch re-planning "
+                         "(repro.serving.online)")
+    ap.add_argument("--arrival-trace", default=None, metavar="PATH",
+                    help="online mode driven by a JSONL arrival trace "
+                         "(one {\"time\": cycles, \"prompt_len\": n} "
+                         "object per line) instead of --qps")
+    ap.add_argument("--slo-ttft-p99-ms", type=float, default=None,
+                    metavar="MS",
+                    help="p99 TTFT target in milliseconds: online "
+                         "planning goes through the 'auto-slo' sweep "
+                         "(cheapest candidate meeting the target) and "
+                         "goodput counts only SLO-meeting completions")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="enable the obs metrics registry for this run "
                          "and write its snapshot to PATH on exit (JSON, "
@@ -126,6 +225,10 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.with_(dtype=jnp.float32, remat="none",
                         kv_cache_dtype=jnp.float32)
+
+    if args.qps is not None or args.arrival_trace is not None:
+        _run_online(args, cfg, reg)
+        return
     mod = family_module(cfg)
     params = mod.init(cfg, jax.random.PRNGKey(0))
 
@@ -190,16 +293,7 @@ def main(argv=None):
     for i, o in enumerate(outs):
         print(f"  req{i}: {list(map(int, o))}")
     if reg is not None:
-        import json
-        if args.metrics_out.endswith(".prom"):
-            payload = reg.prometheus_text()
-        else:
-            payload = json.dumps(reg.snapshot(), indent=2,
-                                 sort_keys=True) + "\n"
-        with open(args.metrics_out, "w") as f:
-            f.write(payload)
-        reg.disable()
-        print(f"metrics snapshot -> {args.metrics_out}")
+        _write_metrics(reg, args.metrics_out)
 
 
 if __name__ == "__main__":

@@ -22,12 +22,12 @@ import time
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                NULL_METRIC, default_registry,
                                disable_metrics, enable_metrics)
-from repro.obs.spans import Span, SpanLog
+from repro.obs.spans import Span, SpanAssembler, SpanLog
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "NULL_METRIC",
-    "Span", "SpanLog", "default_registry", "disable_metrics",
-    "enable_metrics", "instrument",
+    "Span", "SpanAssembler", "SpanLog", "default_registry",
+    "disable_metrics", "enable_metrics", "instrument",
 ]
 
 

@@ -212,3 +212,102 @@ class SpanLog:
     def __repr__(self) -> str:
         return (f"SpanLog({len(self.spans)} spans, "
                 f"{self.n_requests} requests)")
+
+
+class SpanAssembler:
+    """Builds one global :class:`SpanLog` across *admission epochs*.
+
+    The online loop (:mod:`repro.serving.online`) executes one committed
+    sub-schedule per epoch; each epoch's DES/closed-form
+    ``detail["step_spans"]`` is epoch-relative and keyed by *local*
+    request ids.  The assembler joins them into the same per-request
+    lifecycle chain :meth:`SpanLog.from_schedule` produces offline:
+    per-epoch work spans are shifted onto the global clock (``offset``)
+    and remapped to global ids (``id_map``), decode-iteration and
+    prefill-chunk counters persist across epochs (a preempted stream
+    resumed three epochs later continues at ``decode_iter<k>``, not
+    ``decode_iter0``), and :meth:`finalize` closes every chain with the
+    synthetic ``arrival`` / ``admission`` / ``complete`` spans — so
+    :meth:`SpanLog.validate` holds across preemption and eviction
+    (pinned by ``tests/test_online.py``).
+
+    Point *marker* spans (:meth:`mark` — ``preempted`` / ``evicted`` /
+    ``resumed``) ride in the same chain; ``validate`` ignores unknown
+    phases as long as the chain stays monotonic.
+    """
+
+    def __init__(self, n_layers: int):
+        self.n_layers = n_layers
+        self._decode_idx: "dict[int, int]" = {}
+        self._decode_spans: "list[Span]" = []
+        # prefill work per request, phase assigned at finalize (one
+        # chunk -> "prefill", several -> "prefill.chunk<j>" in order —
+        # the offline labels exactly).
+        self._prefill: "dict[int, list[tuple]]" = {}
+        self._marks: "list[Span]" = []
+        self._arrival: "dict[int, float]" = {}
+        self._first_start: "dict[int, float]" = {}
+        self._last_end: "dict[int, float]" = {}
+        self._step_base = 0
+
+    def observe_arrival(self, request: int, time: float) -> None:
+        """Record a request's (global) arrival cycle."""
+        self._arrival[request] = float(time)
+
+    def mark(self, request: int, phase: str, time: float) -> None:
+        """Append a point marker span (``preempted`` / ``evicted`` /
+        ``resumed``) to a request's chain at a global cycle."""
+        self._marks.append(Span(request, phase, float(time), float(time)))
+
+    def add_epoch(self, sched, step_spans, *, offset: float = 0.0,
+                  id_map: "Optional[dict[int, int]]" = None) -> None:
+        """Fold one committed epoch's priced windows into the log.
+
+        ``sched`` / ``step_spans`` use the epoch's *local* request ids
+        and epoch-relative cycles; ``id_map`` translates local → global
+        ids (identity when omitted) and ``offset`` is the epoch's start
+        on the global clock."""
+        windows = _step_windows(sched, step_spans)
+        for j, (step, lt, (s0, e0)) in enumerate(
+                zip(sched.steps, sched.layers, windows)):
+            start, end = s0 + offset, e0 + offset
+            dr = set(_decode_requests(step))
+            iters = max(1, round(step.repeat / self.n_layers))
+            gj = self._step_base + j
+            for r in step.requests:
+                g = id_map[r] if id_map is not None else r
+                self._first_start.setdefault(g, start)
+                self._last_end[g] = max(self._last_end.get(g, end), end)
+                if r in dr:
+                    k0 = self._decode_idx.get(g, 0)
+                    for k in range(iters):
+                        s = start + (end - start) * k / iters
+                        e = start + (end - start) * (k + 1) / iters
+                        self._decode_spans.append(Span(
+                            g, f"decode_iter{k0 + k}", s, e,
+                            step=gj, label=lt.name, kind=step.kind))
+                    self._decode_idx[g] = k0 + iters
+                else:
+                    self._prefill.setdefault(g, []).append(
+                        (start, end, gj, lt.name, step.kind))
+        self._step_base += len(sched.steps)
+
+    def finalize(self) -> SpanLog:
+        """Close every chain and return the global :class:`SpanLog`."""
+        spans: "list[Span]" = list(self._decode_spans)
+        for g, chunks in self._prefill.items():
+            one = len(chunks) == 1
+            for j, (s, e, gj, label, kind) in enumerate(chunks):
+                phase = "prefill" if one else f"prefill.chunk{j}"
+                spans.append(Span(g, phase, s, e, step=gj,
+                                  label=label, kind=kind))
+        spans.extend(self._marks)
+        requests = sorted(self._first_start)
+        for g in requests:
+            arr = self._arrival.get(g, 0.0)
+            spans.append(Span(g, "arrival", arr, arr))
+            spans.append(Span(g, "admission", arr, self._first_start[g]))
+            spans.append(Span(g, "complete", self._last_end[g],
+                              self._last_end[g]))
+        spans.sort(key=lambda s: (s.request, s.start, s.end, s.step))
+        return SpanLog(spans, n_requests=len(requests))

@@ -359,8 +359,12 @@ class ServingEngine:
             sched, _ = scheduler.select_schedule(ctx, **kw)
             self._record_plan(sched)
             return sched
-        sched = scheduler.get_policy(policy, **policy_kw).schedule(ctx)
-        sched.overlap = overlap
+        pol = scheduler.get_policy(policy, **policy_kw)
+        sched = pol.schedule(ctx)
+        if not getattr(pol, "meta", False):
+            # meta-policies (auto-slo) sweep overlap themselves; the
+            # caller's default must not clobber their choice.
+            sched.overlap = overlap
         self._record_plan(sched)
         return sched
 
@@ -414,12 +418,28 @@ class ServingEngine:
         that also run ``scheduler.price_steps`` already have it as the
         per-step sum).
         """
-        from repro import backend
-        from repro.serving.scheduler import backend_kwargs_for
         units = 1 if units is None else units
         sched = self.plan(max_new_tokens, units=units, policy=policy,
                           overlap=overlap)
-        backend_kwargs = backend_kwargs_for(sched, units=units,
+        return sched, self.run_schedule(
+            sched, backend_name=backend_name, operands=operands,
+            workload=workload, **backend_kwargs)
+
+    def run_schedule(self, sched: BatchSchedule,
+                     backend_name: str = "desim", operands=None,
+                     workload: bool = True, attach_spans: bool = True,
+                     **backend_kwargs):
+        """Price an already-planned schedule on a modelling backend —
+        the execution half of :meth:`evaluate_schedule`, callable with a
+        schedule from any source (the online loop re-plans its own
+        epoch schedules and executes each committed one through here,
+        so spans/metrics stay grounded in the same DES path).  Returns
+        the :class:`~repro.backend.base.ExecResult`; ``attach_spans``
+        controls the :class:`~repro.obs.SpanLog` join (the online loop
+        assembles its own global log across epochs instead)."""
+        from repro import backend
+        from repro.serving.scheduler import backend_kwargs_for
+        backend_kwargs = backend_kwargs_for(sched, units=sched.units,
                                             **backend_kwargs)
         # the schedule records the partition it was actually priced
         # under, so downstream latency timelines agree with the pricing.
@@ -434,12 +454,12 @@ class ServingEngine:
         if workload:
             result.detail["workload"] = eng.run_workload(sched.layers)
         spans = result.detail.get("step_spans")
-        if spans is not None and sched.steps:
+        if attach_spans and spans is not None and sched.steps:
             from repro.obs import SpanLog
             log = SpanLog.from_schedule(sched, spans, self.cfg.n_layers)
             result.detail["span_log"] = log
             self._record_spans(log, sched, backend_name)
-        return sched, result
+        return result
 
     def _record_spans(self, log, sched, backend_name: str) -> None:
         """Fold a priced run's span log into the metrics registry:

@@ -80,6 +80,15 @@ class PolicyContext:
     the lowered graph as ``Node.release_time`` and used as the TTFT
     baseline by :func:`decode_latency_stats`.  Empty means the classic
     all-arrived-at-t=0 queue.
+
+    ``prefill_progress`` / ``decode_done`` carry **partial state across
+    re-plans** — the online loop's currency: per request, how many
+    prompt tokens are already prefilled and how many decode iterations
+    already emitted.  A request whose prefill completed in an earlier
+    epoch re-enters the plan as *carryover* (:meth:`carryover`): it
+    skips prefill and only its owed decode iterations are scheduled.
+    Both default empty — all-zero progress, the classic one-shot plan,
+    bit-identical to the pre-online behaviour.
     """
 
     cfg: object                       # models.base.ArchConfig
@@ -88,18 +97,42 @@ class PolicyContext:
     max_new_tokens: int
     units: int = 1
     arrival_times: "tuple[float, ...]" = ()
+    prefill_progress: "tuple[int, ...]" = ()
+    decode_done: "tuple[int, ...]" = ()
 
     def __post_init__(self):
-        if self.arrival_times and \
-                len(self.arrival_times) != len(self.prompt_lengths):
-            raise ValueError(
-                f"{len(self.arrival_times)} arrival_times for "
-                f"{len(self.prompt_lengths)} requests")
+        for field in ("arrival_times", "prefill_progress", "decode_done"):
+            val = getattr(self, field)
+            if val and len(val) != len(self.prompt_lengths):
+                raise ValueError(
+                    f"{len(val)} {field} for "
+                    f"{len(self.prompt_lengths)} requests")
 
     def arrival_of(self, request: int) -> float:
         """Arrival cycle of a request (0.0 when arrivals untracked)."""
         return (self.arrival_times[request]
                 if request < len(self.arrival_times) else 0.0)
+
+    def remaining_prompt(self, request: int) -> int:
+        """Prompt tokens of ``request`` still to prefill."""
+        done = (self.prefill_progress[request]
+                if request < len(self.prefill_progress) else 0)
+        return max(0, self.prompt_lengths[request] - done)
+
+    def decode_owed(self, request: int) -> int:
+        """Decode iterations ``request`` is still owed."""
+        done = (self.decode_done[request]
+                if request < len(self.decode_done) else 0)
+        return max(0, self.max_new_tokens - done)
+
+    def carryover(self) -> "list[tuple[int, int]]":
+        """``[(request id, decode iterations owed)]`` for requests whose
+        prefill already completed in an earlier epoch but still owe
+        decode — the preempted/resumed decode streams every policy must
+        reschedule *before* (or interleaved with) fresh prefill work."""
+        return [(r, self.decode_owed(r))
+                for r in range(len(self.prompt_lengths))
+                if self.remaining_prompt(r) == 0 and self.decode_owed(r) > 0]
 
     @property
     def n_layers(self) -> int:
@@ -108,16 +141,18 @@ class PolicyContext:
     def batches(self) -> "list[tuple[tuple[int, ...], int]]":
         """Padded batch chunks in queue order: ``[(request ids, S_padded)]``
         — the same chunking every policy (and the pre-refactor ``plan``)
-        uses, so policies differ only in *when* steps run."""
+        uses, so policies differ only in *when* steps run.  Requests
+        with no prompt tokens left (online carryover) are excluded;
+        partially-prefilled requests are padded to their *remaining*
+        length — the work a re-plan actually schedules."""
         out = []
-        lengths = list(self.prompt_lengths)
-        first = 0
-        while lengths:
-            chunk, lengths = (lengths[: self.max_batch],
-                              lengths[self.max_batch:])
-            ids = tuple(range(first, first + len(chunk)))
-            first += len(chunk)
-            out.append((ids, max(chunk)))
+        todo = [(r, self.remaining_prompt(r))
+                for r in range(len(self.prompt_lengths))
+                if self.remaining_prompt(r) > 0]
+        while todo:
+            chunk, todo = todo[: self.max_batch], todo[self.max_batch:]
+            out.append((tuple(r for r, _ in chunk),
+                        max(s for _, s in chunk)))
         return out
 
 
@@ -161,6 +196,10 @@ class SchedulingPolicy(abc.ABC):
     """
 
     name: str = "abstract"
+    #: meta-policies (e.g. ``auto-slo``) wrap the candidate sweep rather
+    #: than lowering a schedule shape of their own; the default sweep
+    #: skips them so a sweep can never recurse into itself.
+    meta: bool = False
 
     @abc.abstractmethod
     def schedule(self, ctx: PolicyContext):
@@ -193,6 +232,33 @@ class SchedulingPolicy(abc.ABC):
                              arrival_times=tuple(ctx.arrival_times),
                              release_times=release)
 
+    def _carryover_inflight(self, ctx: PolicyContext) -> "list[_InFlight]":
+        """Online carryover as in-flight decode entries: requests whose
+        prefill completed in an earlier epoch, grouped by owed decode
+        count so the round-robin collapse stays merged.  Empty for the
+        classic one-shot context."""
+        by_owed: "dict[int, list[int]]" = {}
+        for r, owed in ctx.carryover():
+            by_owed.setdefault(owed, []).append(r)
+        return [_InFlight(ci=-1, ids=tuple(ids), left=owed,
+                          label=f"carry{owed}")
+                for owed, ids in sorted(by_owed.items())]
+
+    def _drain_round_robin(self, steps, layers, ctx, inflight):
+        """Fair round-robin drain of everything still owing decode
+        iterations, collapsed into one merged step per distinct horizon
+        (every in-flight batch advances one token per round)."""
+        while inflight:
+            m = min(d.left for d in inflight)
+            ids = tuple(i for d in inflight for i in d.ids)
+            tag = "+".join(d.tag for d in inflight)
+            self._emit(steps, layers, ctx, "decode", f"{tag}/decode.rr",
+                       ids, tokens=len(ids), repeat=ctx.n_layers * m,
+                       decode_requests=ids)
+            for d in inflight:
+                d.left -= m
+            inflight[:] = [d for d in inflight if d.left > 0]
+
 
 # ---------------------------------------------------------------------------
 # The three built-in policies.
@@ -204,12 +270,16 @@ class FullPrefillPolicy(SchedulingPolicy):
     padded batch one prefill step over ``B × S_padded`` tokens, then all
     ``max_new_tokens`` decode iterations collapsed into one lockstep
     step.  Schedules are bit-identical to the old inline policy (pinned
-    by ``tests/test_scheduler.py``)."""
+    by ``tests/test_scheduler.py``).  Online carryover (decode streams
+    resumed from an earlier epoch) drains first, lockstep — finishing
+    interrupted streams before new prefill is this policy's creed."""
 
     name = "full-prefill"
 
     def schedule(self, ctx: PolicyContext):
         steps, layers = [], []
+        self._drain_round_robin(steps, layers, ctx,
+                                self._carryover_inflight(ctx))
         for ci, (ids, s) in enumerate(ctx.batches()):
             b = len(ids)
             self._emit(steps, layers, ctx, "prefill", f"b{ci}/prefill",
@@ -225,6 +295,11 @@ class _InFlight:
     ci: int
     ids: "tuple[int, ...]"
     left: int                        # decode iterations still owed
+    label: str = ""                  # step-name tag ("": derive from ci)
+
+    @property
+    def tag(self) -> str:
+        return self.label or f"b{self.ci}"
 
 
 class _ChunkingPolicy(SchedulingPolicy):
@@ -241,21 +316,6 @@ class _ChunkingPolicy(SchedulingPolicy):
         return [min(self.chunk_tokens, total - j * self.chunk_tokens)
                 for j in range(n)]
 
-    def _drain_round_robin(self, steps, layers, ctx, inflight):
-        """Fair round-robin drain of everything still owing decode
-        iterations, collapsed into one merged step per distinct horizon
-        (every in-flight batch advances one token per round)."""
-        while inflight:
-            m = min(d.left for d in inflight)
-            ids = tuple(i for d in inflight for i in d.ids)
-            tag = "+".join(f"b{d.ci}" for d in inflight)
-            self._emit(steps, layers, ctx, "decode", f"{tag}/decode.rr",
-                       ids, tokens=len(ids), repeat=ctx.n_layers * m,
-                       decode_requests=ids)
-            for d in inflight:
-                d.left -= m
-            inflight[:] = [d for d in inflight if d.left > 0]
-
 
 @register_policy
 class ChunkedPrefillPolicy(_ChunkingPolicy):
@@ -269,7 +329,8 @@ class ChunkedPrefillPolicy(_ChunkingPolicy):
 
     def schedule(self, ctx: PolicyContext):
         steps, layers = [], []
-        inflight: "list[_InFlight]" = []
+        # online carryover decode streams piggyback from the first chunk
+        inflight: "list[_InFlight]" = self._carryover_inflight(ctx)
         for ci, (ids, s) in enumerate(ctx.batches()):
             b = len(ids)
             for j, chunk in enumerate(self._chunks(b * s)):
@@ -308,7 +369,8 @@ class DecodePriorityPolicy(_ChunkingPolicy):
     def schedule(self, ctx: PolicyContext):
         steps, layers = [], []
         affinity: "dict[str, int]" = {}
-        inflight: "list[_InFlight]" = []
+        # online carryover preempts the very first prefill chunk
+        inflight: "list[_InFlight]" = self._carryover_inflight(ctx)
         rr = 0
 
         def emit_decode(name, rid, repeat):
@@ -375,13 +437,24 @@ _PRICE_CACHE: "dict[tuple, dict]" = {}
 _PRICE_CACHE_MAX = 4096
 
 
-def _layer_price_key(lt, sched, backend_name: str, kw: dict) -> tuple:
+def _layer_price_key(lt, sched, backend_name: str, kw: dict,
+                     release: float = 0.0) -> tuple:
     """Cache key of one step's price: everything its cost can depend on.
     ``LayerTrace``/``MatMulTask`` are dataclasses with content reprs;
     the step *name* only matters when the partition affinity hints it
-    somewhere, so unhinted same-shape steps share an entry."""
+    somewhere, so unhinted same-shape steps share an entry.
+
+    The schedule's ``overlap`` mode and the step's ``release`` time are
+    part of the key: today's per-step ``run_workload`` pricing is
+    arrival- and overlap-independent, but the cache contract is "a hit
+    is exact by construction" — the online loop re-prices the *same
+    shapes* under shifted arrivals every admission epoch, and a backend
+    that starts charging release gaps or cross-step contention into
+    step costs must never alias a stale entry (pinned by
+    ``tests/test_online.py``)."""
     hinted = lt.name if lt.name in (sched.affinity or {}) else None
     return (backend_name, repr(sorted(kw.items())), hinted,
+            sched.overlap, release,
             tuple(repr(g) for g in lt.gemms),
             tuple(sorted(lt.vector_ops.items())),
             lt.intermediate_bytes, lt.repeat)
@@ -404,8 +477,9 @@ def _price_workloads(sched, backend_name: str,
     eng = None
     reg = default_registry()
     out: "list[dict]" = []
-    for lt in sched.layers:
-        key = _layer_price_key(lt, sched, backend_name, kw)
+    rel = list(sched.release_times) or [0.0] * len(sched.layers)
+    for lt, release in zip(sched.layers, rel):
+        key = _layer_price_key(lt, sched, backend_name, kw, release)
         w = _PRICE_CACHE.get(key)
         if w is None:
             reg.counter("price_cache_misses_total",
@@ -616,6 +690,7 @@ def select_schedule(ctx: PolicyContext, *,
                     strategies: "Optional[list[str]]" = None,
                     overlaps: "Optional[list[str]]" = None,
                     policy_kw: "Optional[dict]" = None,
+                    ttft_p99_slo: "Optional[float]" = None,
                     **backend_kwargs):
     """Price every (policy × partition strategy × overlap) candidate
     with the closed-form ``analytical`` backend (no DES run) and return
@@ -633,8 +708,22 @@ def select_schedule(ctx: PolicyContext, *,
     maps candidate keys to their metric dicts (chained candidates keep
     the bare ``policy×strategy`` key; relaxed ones append
     ``×relaxed``), the chosen one repeated under ``"chosen"``.
+
+    ``ttft_p99_slo`` (cycles) switches to **SLO selection** — the
+    ``auto-slo`` policy's rule: among candidates whose ``ttft_p99``
+    meets the target, pick the *cheapest* (lowest ``workload_cycles``,
+    makespan tie-break) regardless of the slack rule; when *no*
+    candidate meets the target, degrade gracefully to the candidate
+    closest to it (lowest ``ttft_p99``).  ``report["chosen"]["slo_met"]``
+    records which branch fired.
+
+    The default sweep covers every registered *concrete* policy;
+    meta-policies (``SchedulingPolicy.meta``) are skipped so the sweep
+    cannot recurse into the policy that invoked it.
     """
-    names = list(policies or POLICIES)
+    names = list(policies if policies is not None else
+                 [n for n, c in POLICIES.items()
+                  if not getattr(c, "meta", False)])
     strats = list(strategies or
                   (["output-tile", "unit-affinity"] if ctx.units > 1
                    else [None]))
@@ -676,12 +765,83 @@ def select_schedule(ctx: PolicyContext, *,
             "no priceable candidates: overlap='relaxed' only differs "
             "under a hint-emitting policy with the 'unit-affinity' "
             "strategy — include 'chained' in overlaps or widen the sweep")
-    best_makespan = min(m["makespan"] for _, m in cands.values())
-    feasible = {k: v for k, v in cands.items()
-                if v[1]["makespan"] <= (1 + makespan_slack) * best_makespan}
-    key = min(feasible, key=lambda k: (feasible[k][1][objective],
-                                       feasible[k][1]["makespan"]))
-    sched, metrics = feasible[key]
+    slo_met = None
+    if ttft_p99_slo is not None:
+        meeting = {k: v for k, v in cands.items()
+                   if v[1]["ttft_p99"] <= ttft_p99_slo}
+        slo_met = bool(meeting)
+        if meeting:                  # cheapest candidate meeting the SLO
+            key = min(meeting, key=lambda k: (
+                meeting[k][1]["workload_cycles"],
+                meeting[k][1]["makespan"]))
+        else:                        # none can: closest to the target
+            key = min(cands, key=lambda k: (cands[k][1]["ttft_p99"],
+                                            cands[k][1]["makespan"]))
+        sched, metrics = cands[key]
+    else:
+        best_makespan = min(m["makespan"] for _, m in cands.values())
+        feasible = {k: v for k, v in cands.items()
+                    if v[1]["makespan"]
+                    <= (1 + makespan_slack) * best_makespan}
+        key = min(feasible, key=lambda k: (feasible[k][1][objective],
+                                           feasible[k][1]["makespan"]))
+        sched, metrics = feasible[key]
     report = {k: m for k, (_, m) in cands.items()}
     report["chosen"] = dict(metrics, candidate=key)
+    if slo_met is not None:
+        report["chosen"]["slo_met"] = slo_met
     return sched, report
+
+
+# ---------------------------------------------------------------------------
+# SLO-aware meta-policy: cheapest candidate meeting a p99 TTFT target.
+# ---------------------------------------------------------------------------
+
+@register_policy
+class AutoSLOPolicy(SchedulingPolicy):
+    """``policy="auto-slo"``: run the full (policy × partition ×
+    overlap) candidate sweep and pick the **cheapest** candidate
+    (lowest ``workload_cycles``) whose analytical ``ttft_p99`` meets
+    ``ttft_p99_target`` — serve the SLO, spend nothing beyond it.  When
+    no candidate can meet the target the policy degrades gracefully to
+    the candidate closest to it; with no target at all it reduces to
+    the classic slack-bounded ``objective`` selection ("auto").
+
+    A *meta*-policy: it owns no schedule shape, so the sweep it invokes
+    skips it (``meta = True``) and the returned schedule keeps the
+    winning concrete policy's name, affinity and overlap.  The sweep's
+    full pricing report is kept on :attr:`last_report` for callers (the
+    online loop logs the chosen candidate per admission epoch)."""
+
+    name = "auto-slo"
+    meta = True
+
+    def __init__(self, ttft_p99_target: "Optional[float]" = None,
+                 backend_name: str = "analytical",
+                 objective: str = "decode_p50",
+                 makespan_slack: float = 0.05,
+                 policies: "Optional[list[str]]" = None,
+                 strategies: "Optional[list[str]]" = None,
+                 overlaps: "Optional[list[str]]" = None,
+                 policy_kw: "Optional[dict]" = None,
+                 **backend_kwargs):
+        self.ttft_p99_target = ttft_p99_target
+        self.backend_name = backend_name
+        self.objective = objective
+        self.makespan_slack = makespan_slack
+        self.policies = policies
+        self.strategies = strategies
+        self.overlaps = overlaps
+        self.policy_kw = policy_kw
+        self.backend_kwargs = backend_kwargs
+        self.last_report: "Optional[dict]" = None
+
+    def schedule(self, ctx: PolicyContext):
+        sched, report = select_schedule(
+            ctx, backend_name=self.backend_name, objective=self.objective,
+            makespan_slack=self.makespan_slack, policies=self.policies,
+            strategies=self.strategies, overlaps=self.overlaps,
+            policy_kw=self.policy_kw, ttft_p99_slo=self.ttft_p99_target,
+            **self.backend_kwargs)
+        self.last_report = report
+        return sched

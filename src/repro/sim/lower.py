@@ -522,6 +522,15 @@ def step_spans(graph: TaskGraph, result) -> "dict[str, tuple[float, float]]":
     return out
 
 
+def offset_step_spans(spans: "dict[str, tuple[float, float]]",
+                      offset: float) -> "dict[str, tuple[float, float]]":
+    """Shift per-step ``(start, end)`` windows by ``offset`` cycles —
+    an admission epoch's DES run starts its clock at 0, so the online
+    loop adds the epoch's global start before folding the windows into
+    the cross-epoch span log."""
+    return {k: (s + offset, e + offset) for k, (s, e) in spans.items()}
+
+
 def gemm_labels(graph: TaskGraph) -> "list[str]":
     """Distinct GEMM labels of a graph, in program order.  One label per
     ``build_gemm_graph`` call — for a ``workload_to_graph`` schedule that

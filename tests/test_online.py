@@ -1,0 +1,358 @@
+"""Online closed-loop serving: arrival determinism, admission epochs,
+preemption/eviction state carry, SLO-aware planning, saturation.
+
+Pins the contracts ``repro.serving.online`` promises:
+
+* arrival sources are bit-identical under a seed (Mersenne-Twister
+  stream, pinned values) and the admission sequence does not depend on
+  which backend executes the epochs;
+* low-load online TTFT matches the offline plan (same arrivals, DES
+  spans on both sides) within 10%;
+* a preempted-then-resumed decode stream keeps one monotonic,
+  complete ``decode_iter`` chain and a clean ``SpanLog.validate()``;
+* ``auto-slo`` picks an SLO-meeting candidate whenever one exists and
+  degrades gracefully when none can;
+* the pricing cache never aliases schedules that differ only in
+  arrival times (release is part of the key);
+* every concrete policy shows a goodput saturation knee.
+"""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import get_config
+from repro.obs import disable_metrics, enable_metrics
+from repro.serving import scheduler
+from repro.serving.arrivals import (DeterministicArrivals, PoissonArrivals,
+                                    TraceArrivals, gap_to_qps, qps_to_gap,
+                                    write_trace)
+from repro.serving.engine import ServingEngine
+from repro.serving.online import (OnlineServingEngine, find_saturation,
+                                  qps_sweep)
+from repro.serving.scheduler import (PolicyContext, _percentile,
+                                     select_schedule)
+
+
+def _cfg():
+    return get_config("yi-6b", reduced=True)
+
+
+def _concrete_policies():
+    return [n for n in scheduler.available_policies()
+            if not getattr(scheduler.get_policy(n), "meta", False)]
+
+
+# ---------------------------------------------------------------------------
+# Arrival sources — determinism audit (satellite: seeded generators)
+# ---------------------------------------------------------------------------
+
+class TestArrivalDeterminism:
+    def test_same_seed_bit_identical(self):
+        kw = dict(mean_gap=5000.0, n=8, seed=42)
+        assert PoissonArrivals(**kw).arrivals() == \
+            PoissonArrivals(**kw).arrivals()
+
+    def test_repeated_iteration_identical(self):
+        src = PoissonArrivals(mean_gap=5000.0, n=4, seed=1)
+        assert tuple(src) == tuple(src) == src.arrivals()
+
+    def test_pinned_poisson_stream(self):
+        # random.Random's Mersenne-Twister stream is pinned across
+        # platforms and Python versions — these exact floats are the
+        # cross-backend determinism contract.
+        src = PoissonArrivals(mean_gap=1000.0, n=3, seed=0,
+                              prompt_lengths=(8,))
+        assert [a.time for a in src] == [1860.6071110652233,
+                                         3279.236264036985,
+                                         3824.949409578578]
+
+    def test_different_seed_differs(self):
+        a = PoissonArrivals(mean_gap=1000.0, n=4, seed=0).arrivals()
+        b = PoissonArrivals(mean_gap=1000.0, n=4, seed=1).arrivals()
+        assert [x.time for x in a] != [x.time for x in b]
+
+    def test_deterministic_gap_times(self):
+        src = DeterministicArrivals(gap=100.0, n=3, prompt_lengths=(7,))
+        assert [(a.time, a.prompt_len) for a in src] == \
+            [(100.0, 7), (200.0, 7), (300.0, 7)]
+
+    def test_qps_gap_roundtrip(self):
+        assert qps_to_gap(20000.0, 2e9) == 100000.0
+        assert gap_to_qps(qps_to_gap(12345.0, 2e9), 2e9) == \
+            pytest.approx(12345.0)
+
+    def test_admission_sequence_backend_independent(self):
+        # Same seed -> identical admission sequence whether epochs
+        # execute on the DES or the analytical closed form.
+        src = PoissonArrivals(mean_gap=30000.0, n=6, seed=3,
+                              prompt_lengths=(16, 32))
+        orders = {}
+        for be in ("analytical", "desim"):
+            eng = OnlineServingEngine(_cfg(), max_batch=2,
+                                      max_new_tokens=4,
+                                      policy="chunked-prefill",
+                                      execute_backend=be)
+            res = eng.run(src)
+            orders[be] = [rid for e in res.epochs for rid in e.admitted]
+        assert orders["analytical"] == orders["desim"]
+        assert sorted(orders["desim"]) == list(range(6))
+
+
+class TestTraceRoundTrip:
+    def test_write_then_replay_is_identical(self, tmp_path):
+        src = PoissonArrivals(mean_gap=2000.0, n=5, seed=9)
+        path = str(tmp_path / "trace.jsonl")
+        assert write_trace(path, src) == 5
+        replay = TraceArrivals(path).arrivals()
+        assert replay == src.arrivals()
+
+    def test_bad_record_reports_line(self, tmp_path):
+        path = tmp_path / "bad.jsonl"
+        path.write_text('{"time": 1.0, "prompt_len": 4}\n{"time": 2.0}\n')
+        with pytest.raises(ValueError, match="bad.jsonl:2"):
+            TraceArrivals(str(path)).arrivals()
+
+    def test_decreasing_times_rejected(self, tmp_path):
+        path = tmp_path / "dec.jsonl"
+        path.write_text('{"time": 5.0, "prompt_len": 4}\n'
+                        '{"time": 1.0, "prompt_len": 4}\n')
+        with pytest.raises(ValueError, match="non-decreasing"):
+            TraceArrivals(str(path)).arrivals()
+
+
+# ---------------------------------------------------------------------------
+# Closed loop — low-load parity with the offline plan
+# ---------------------------------------------------------------------------
+
+class TestLowLoadParity:
+    def test_online_ttft_matches_offline_plan(self):
+        # At low offered load the closed loop degenerates to the
+        # offline plan: same arrivals, same policy, DES spans on both
+        # sides — TTFT p50 within 10% (acceptance criterion).
+        cfg = _cfg()
+        src = PoissonArrivals(mean_gap=2e5, n=5, seed=7,
+                              prompt_lengths=(8, 12, 16))
+        oeng = OnlineServingEngine(cfg, max_batch=1, max_new_tokens=4,
+                                   policy="full-prefill")
+        ores = oeng.run(src)
+        assert ores.span_log.validate() == []
+        assert len(ores.completed()) == 5
+        p50o = _percentile(sorted(ores.ttfts().values()), 50)
+
+        feng = ServingEngine(cfg, None, max_batch=1)
+        for a in src:
+            feng.submit(jnp.zeros((a.prompt_len,), jnp.int32), a.time)
+        _, fres = feng.evaluate_schedule("desim", max_new_tokens=4,
+                                         policy="full-prefill")
+        flog = fres.detail["span_log"]
+        p50f = _percentile(sorted(flog.ttft(r)
+                                  for r in flog.requests()), 50)
+        assert p50f > 0
+        assert abs(p50o - p50f) / p50f <= 0.10, (p50o, p50f)
+
+    def test_gap_zero_admits_everything_at_once(self):
+        res = OnlineServingEngine(
+            _cfg(), max_batch=2, max_new_tokens=2,
+            execute_backend="analytical",
+        ).run(DeterministicArrivals(gap=0.0, n=4, prompt_lengths=(16,)))
+        assert res.epochs[0].admitted == (0, 1, 2, 3)
+        assert len(res.completed()) == 4
+        assert res.span_log.validate() == []
+
+
+# ---------------------------------------------------------------------------
+# Preemption / eviction — state carried across re-plans (satellite 3)
+# ---------------------------------------------------------------------------
+
+class TestPreemptionEviction:
+    @pytest.fixture(scope="class")
+    def churny(self):
+        # Short prompts + long decode + tight admission cap: request 1
+        # is evicted for a waiting arrival, preempted twice by
+        # re-plans, resumed, and still finishes all 16 tokens.
+        eng = OnlineServingEngine(_cfg(), max_batch=2, max_new_tokens=16,
+                                  policy="decode-priority",
+                                  policy_kw={"chunk_tokens": 16},
+                                  execute_backend="analytical",
+                                  max_inflight=2, evict_to_admit=True)
+        return eng.run(DeterministicArrivals(gap=3000.0, n=5,
+                                             prompt_lengths=(8,)))
+
+    def test_churn_actually_happened(self, churny):
+        assert churny.n_preemptions >= 2
+        assert churny.n_evictions >= 1
+
+    def test_all_requests_complete(self, churny):
+        assert len(churny.completed()) == 5
+        assert all(r.decode_done == 16 for r in churny.requests)
+
+    def test_span_log_validates_clean(self, churny):
+        assert churny.span_log.validate() == []
+
+    def test_resumed_decode_chain_monotonic_and_complete(self, churny):
+        victim = max(churny.requests, key=lambda r: r.evictions)
+        assert victim.evictions >= 1 and victim.preemptions >= 1
+        spans = sorted((s for s in churny.span_log
+                        if s.request == victim.rid
+                        and s.phase.startswith("decode_iter")),
+                       key=lambda s: s.start)
+        # one span per token, indices 0..15 in start order, starts
+        # non-decreasing across the eviction gap — the chain resumes,
+        # it never restarts.
+        assert [s.phase for s in spans] == \
+            [f"decode_iter{k}" for k in range(16)]
+        for a, b in zip(spans, spans[1:]):
+            assert b.start >= a.end - 1e-9
+
+    def test_lifecycle_markers_present(self, churny):
+        victim = max(churny.requests, key=lambda r: r.evictions)
+        marks = [s.phase for s in churny.span_log
+                 if s.request == victim.rid and s.start == s.end]
+        for phase in ("preempted", "evicted", "resumed", "complete"):
+            assert phase in marks, (phase, marks)
+
+    def test_epoch_records_name_the_churn(self, churny):
+        preempted = [rid for e in churny.epochs for rid in e.preempted]
+        evicted = [rid for e in churny.epochs for rid in e.evicted]
+        assert len(preempted) == churny.n_preemptions
+        assert len(evicted) == churny.n_evictions
+
+
+# ---------------------------------------------------------------------------
+# auto-slo — SLO-aware candidate selection
+# ---------------------------------------------------------------------------
+
+class TestAutoSLO:
+    def test_registered_as_meta_policy(self):
+        assert "auto-slo" in scheduler.available_policies()
+        assert getattr(scheduler.get_policy("auto-slo"), "meta", False)
+        assert "auto-slo" not in _concrete_policies()
+
+    def test_meets_target_when_any_candidate_can(self):
+        ctx = PolicyContext(cfg=_cfg(), prompt_lengths=(64, 96, 128),
+                            max_batch=2, max_new_tokens=8)
+        _, rep = select_schedule(ctx, ttft_p99_slo=1e9)
+        chosen = rep["chosen"]
+        assert chosen["slo_met"] is True
+        assert chosen["ttft_p99"] <= 1e9
+        # among SLO-meeting candidates the cheapest wins.
+        cands = {k: v for k, v in rep.items() if k != "chosen"}
+        meeting = [v for v in cands.values() if v["ttft_p99"] <= 1e9]
+        assert chosen["workload_cycles"] == min(
+            v["workload_cycles"] for v in meeting)
+
+    def test_unmeetable_target_degrades_to_best_ttft(self):
+        ctx = PolicyContext(cfg=_cfg(), prompt_lengths=(64, 96, 128),
+                            max_batch=2, max_new_tokens=8)
+        _, rep = select_schedule(ctx, ttft_p99_slo=1.0)
+        chosen = rep["chosen"]
+        assert chosen["slo_met"] is False
+        assert chosen["ttft_p99"] == min(
+            v["ttft_p99"] for k, v in rep.items() if k != "chosen")
+
+    def test_online_engine_routes_through_slo_sweep(self):
+        eng = OnlineServingEngine(_cfg(), max_batch=2, max_new_tokens=2,
+                                  execute_backend="analytical",
+                                  ttft_p99_slo=2e5)
+        res = eng.run(DeterministicArrivals(gap=50000.0, n=3,
+                                            prompt_lengths=(16,)))
+        assert res.epochs
+        assert all(e.slo_met is True for e in res.epochs)
+        assert all(e.candidate in _concrete_policies()
+                   for e in res.epochs)
+
+
+# ---------------------------------------------------------------------------
+# Pricing cache — arrivals reach the key (satellite 1)
+# ---------------------------------------------------------------------------
+
+class TestPriceCacheArrivals:
+    def _plan(self, arrival_gap):
+        eng = ServingEngine(_cfg(), None, max_batch=2)
+        for i in range(4):
+            eng.submit(jnp.zeros((16,), jnp.int32),
+                       arrival_time=float(i) * arrival_gap)
+        return eng.plan(max_new_tokens=2, policy="full-prefill")
+
+    def test_schedules_differing_only_in_arrivals_do_not_alias(self):
+        s0 = self._plan(0.0)
+        s1 = self._plan(40000.0)
+        assert [lt.gemms for lt in s0.layers] == \
+            [lt.gemms for lt in s1.layers]      # same shapes...
+        assert s0.release_times != s1.release_times
+        # ...but no key of a released step aliases the t=0 schedule.
+        kw = scheduler.backend_kwargs_for(s0)
+        k0 = {scheduler._layer_price_key(lt, s0, "analytical", kw, r)
+              for lt, r in zip(s0.layers, s0.release_times)}
+        released = [scheduler._layer_price_key(lt, s1, "analytical", kw, r)
+                    for lt, r in zip(s1.layers, s1.release_times)
+                    if r > 0.0]
+        assert released
+        assert not set(released) & k0
+
+    def test_shifted_arrivals_miss_the_cache(self):
+        scheduler.clear_price_cache()
+        s0 = self._plan(0.0)
+        s1 = self._plan(40000.0)
+        scheduler.price_steps(s0)               # warm the t=0 entries
+        reg = enable_metrics()
+        try:
+            scheduler.price_steps(s1)
+            snap = reg.snapshot()
+        finally:
+            disable_metrics()
+            reg.clear()
+        misses = sum(e["value"]
+                     for e in snap["counters"]["price_cache_misses_total"])
+        n_released = sum(1 for r in s1.release_times if r > 0.0)
+        assert misses >= n_released >= 1, \
+            "released steps must not reuse t=0 cached prices"
+
+    def test_overlap_mode_reaches_the_key(self):
+        import dataclasses
+        s0 = self._plan(0.0)
+        s1 = dataclasses.replace(s0, overlap="relaxed")
+        kw = scheduler.backend_kwargs_for(s0)
+        assert scheduler._layer_price_key(s0.layers[0], s0,
+                                          "analytical", kw, 0.0) != \
+            scheduler._layer_price_key(s1.layers[0], s1,
+                                       "analytical", kw, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Sustained load — QPS sweep + saturation knee
+# ---------------------------------------------------------------------------
+
+class TestSustainedLoad:
+    def test_qps_sweep_rows_complete(self):
+        rows = qps_sweep(_cfg(), [1e4, 1e5], n_requests=4, seed=0,
+                         prompt_lengths=(32, 64), max_batch=2,
+                         max_new_tokens=4, execute_backend="analytical")
+        assert [r["offered_qps"] for r in rows] == [1e4, 1e5]
+        for r in rows:
+            assert r["completed"] == 4.0
+            assert r["goodput_qps"] > 0.0
+            assert r["ttft_p99"] >= r["ttft_p50"] > 0.0
+
+    def test_sweep_deterministic_under_seed(self):
+        kw = dict(n_requests=4, seed=5, prompt_lengths=(32,),
+                  max_batch=2, max_new_tokens=4,
+                  execute_backend="analytical")
+        assert qps_sweep(_cfg(), [5e4], **kw) == \
+            qps_sweep(_cfg(), [5e4], **kw)
+
+    @pytest.mark.parametrize("policy", ["full-prefill",
+                                        "chunked-prefill",
+                                        "decode-priority"])
+    def test_every_policy_has_a_saturation_knee(self, policy):
+        sat = find_saturation(_cfg(), start_qps=1e4, factor=4.0,
+                              max_points=6, n_requests=6, seed=0,
+                              prompt_lengths=(64, 96, 128),
+                              policy=policy, max_batch=2,
+                              max_new_tokens=8,
+                              execute_backend="analytical")
+        assert sat["saturated"], sat
+        assert sat["knee_qps"] is not None
+        assert sat["peak_goodput_qps"] > 0.0
+        kept = sat["points"]
+        assert kept[0]["keeps_up"] and not kept[-1]["keeps_up"]

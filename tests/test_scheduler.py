@@ -67,9 +67,14 @@ def _legacy_plan(eng, max_new_tokens, units=1):
 
 
 class TestPolicyRegistry:
-    def test_three_policies_registered(self):
-        assert set(scheduler.available_policies()) == {
-            "full-prefill", "chunked-prefill", "decode-priority"}
+    def test_registered_policies(self):
+        names = set(scheduler.available_policies())
+        assert names == {"full-prefill", "chunked-prefill",
+                         "decode-priority", "auto-slo"}
+        concrete = {n for n in names
+                    if not getattr(scheduler.get_policy(n), "meta", False)}
+        assert concrete == {"full-prefill", "chunked-prefill",
+                            "decode-priority"}
 
     def test_unknown_policy_lists_names(self):
         with pytest.raises(KeyError, match="chunked-prefill"):
