@@ -72,6 +72,19 @@ ONLINE_SATURATION = ["full-prefill", "chunked-prefill",
 ONLINE_METRICS = ("ttft_p50", "ttft_p99", "itl_p50", "itl_p99",
                   "goodput_qps", "makespan", "preemptions")
 
+#: tuned-dispatch decode-regime rows: (platform, in_quick).  Two
+#: platforms with distinct dispatch models (RoCC in-order shuttle, CSR
+#: OoO kunminghu) gate the tuned win in CI; the other two ride the full
+#: recording.
+TUNED_POINTS = [("shuttle", True), ("kunminghu", True),
+                ("rocket", False), ("boom", False)]
+
+#: cluster-DES makespans of the four (tuned × fused) corners plus the
+#: derived speedups (higher-better in check_bench).  ``speedup`` is the
+#: pinned end-to-end win: tuned-fused vs untuned-unfused.
+TUNED_METRICS = ("tuned", "untuned", "tuned_unfused", "untuned_unfused",
+                 "speedup", "tuned_speedup", "fusion_speedup")
+
 
 def record_serving(quick: bool) -> dict:
     from benchmarks.run import serving_queue
@@ -92,6 +105,7 @@ def record_serving(quick: bool) -> dict:
             "info": {"wall_s": round(wall, 4), "steps": len(sched.steps)},
         }
     entries.update(record_online(quick))
+    entries.update(record_tuned(quick))
     return {
         "schema_version": SCHEMA_VERSION,
         "bench": "serving",
@@ -100,9 +114,34 @@ def record_serving(quick: bool) -> dict:
                    "backend": "analytical",
                    "online": {"traffic": "poisson seed=0",
                               "execute_backend": "analytical",
-                              "max_new_tokens": 8}},
+                              "max_new_tokens": 8},
+                   "tuned": {"regime": "decode-priority u2",
+                             "backend": "desim-cluster"}},
         "entries": entries,
     }
+
+
+def record_tuned(quick: bool) -> "dict[str, dict]":
+    """The tuned-dispatch rows: per platform, the cluster-DES makespans
+    of the canonical Llama-style decode regime at the four (tuned ×
+    fused) corners, with the epilogue-fusion contribution isolated
+    (``fusion_speedup`` = tuned-unfused / tuned-fused).  Deterministic —
+    fixed queue, fixed plan, committed tuning caches — so the speedups
+    are gated exactly like every other tracked metric."""
+    from repro.tune.regime import measure_decode_regime
+
+    entries: "dict[str, dict]" = {}
+    for plat, in_quick in TUNED_POINTS:
+        if quick and not in_quick:
+            continue
+        t0 = time.perf_counter()
+        m = measure_decode_regime(plat)
+        wall = time.perf_counter() - t0
+        entries[f"tuned|decode|{plat}"] = {
+            "metrics": {k: m[k] for k in TUNED_METRICS},
+            "info": {"wall_s": round(wall, 4)},
+        }
+    return entries
 
 
 def record_online(quick: bool) -> "dict[str, dict]":

@@ -31,6 +31,11 @@ UNITS_SET = False
 #: restricts the sweep to one of them (or "auto").
 POLICY = None
 
+#: True when --tuned was given: serving plans resolve through the
+#: per-platform tuning cache (``repro.backend.get_tuned`` dispatch)
+#: instead of the untuned defaults.
+TUNED = False
+
 
 def workload_sim():
     """The model-level simulator the --engine registry lookup selects
@@ -404,7 +409,7 @@ def bench_serving():
             for ov in overlaps:
                 def run(pol=pol, u=u, ov=ov):
                     sched = eng.plan(max_new_tokens=16, units=u,
-                                     policy=pol, overlap=ov)
+                                     policy=pol, overlap=ov, tuned=TUNED)
                     return sched, schedule_metrics(sched, cfg.n_layers,
                                                    "analytical")
 
@@ -537,6 +542,31 @@ def bench_roofline():
          f"{best['arch']}x{best['shape']} frac={best['frac']:.3f}")
 
 
+# ---------------------------------------------------------------------------
+# Tuned dispatch: the autotuner's measured end-to-end win.
+# ---------------------------------------------------------------------------
+
+#: platforms the tune bench prices (two distinct dispatch models —
+#: RoCC in-order and CSR OoO — is the acceptance bar; --only tune with
+#: all four is a cache-regeneration sanity sweep, not the default).
+TUNE_PLATFORMS = ("shuttle", "kunminghu")
+
+
+def bench_tune():
+    """Tuned vs untuned cluster-DES makespan of the canonical
+    Llama-style decode regime per platform, with the epilogue-fusion
+    contribution isolated (tuned-unfused / tuned-fused)."""
+    from repro.tune.regime import measure_decode_regime
+
+    for plat in TUNE_PLATFORMS:
+        m, us = timed(lambda plat=plat: measure_decode_regime(plat))
+        emit(f"tune_decode_{plat}", us,
+             f"tuned={m['tuned']:.0f} untuned={m['untuned']:.0f} "
+             f"tuned_speedup={m['tuned_speedup']:.3f} "
+             f"fusion_speedup={m['fusion_speedup']:.3f} "
+             f"end_to_end_speedup={m['speedup']:.3f}")
+
+
 BENCHES = {
     "eq1": bench_eq1_throughput,
     "fig6": bench_fig6_platforms,
@@ -551,13 +581,16 @@ BENCHES = {
     "table7": bench_table7_area,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
+    "tune": bench_tune,
 }
 
 
 def main() -> None:
-    global ENGINE, UNITS, UNITS_SET, POLICY
+    global ENGINE, UNITS, UNITS_SET, POLICY, TUNED
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", choices=tuple(BENCHES), default=None)
+    ap.add_argument("--only", default=None, metavar="NAME[,NAME...]",
+                    help="run only the named bench(es), comma-separated; "
+                         "an unknown name errors with the known list")
     ap.add_argument("--engine", default="analytical",
                     help="repro.backend registry name of the modelling "
                          "engine for table6/overlap (aliases accepted): "
@@ -576,7 +609,18 @@ def main() -> None:
                     help="restrict the serving/online benches to one "
                          "batching policy (default: sweep all concrete "
                          "policies + auto)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="resolve serving plans through the per-platform "
+                         "tuning cache (repro.backend.get_tuned dispatch) "
+                         "instead of the untuned defaults")
     args = ap.parse_args()
+    only = None
+    if args.only:
+        only = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = sorted(set(only) - set(BENCHES))
+        if unknown:
+            ap.error(f"unknown bench name(s): {', '.join(unknown)}; "
+                     f"known benches: {', '.join(BENCHES)}")
     from repro import backend
     try:
         ENGINE = backend.resolve(args.engine)
@@ -587,8 +631,9 @@ def main() -> None:
     UNITS_SET = args.units is not None
     UNITS = args.units if UNITS_SET else 1
     POLICY = args.policy
+    TUNED = args.tuned
     probe = backend.get(ENGINE)
-    if UNITS != 1 and not probe.supports_units and args.only != "cluster":
+    if UNITS != 1 and not probe.supports_units and only != ["cluster"]:
         ap.error(f"--units {UNITS} needs a cluster-aware --engine "
                  "('desim-cluster'), or --only cluster")
     if not probe.models_time:
@@ -597,7 +642,7 @@ def main() -> None:
                  f"{[n for n in backend.available() if backend.get(n).models_time]}")
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
-        if args.only and name != args.only:
+        if only is not None and name not in only:
             continue
         fn()
 

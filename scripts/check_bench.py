@@ -5,9 +5,10 @@ Compares fresh snapshots (a ``benchmarks/record.py`` run, usually
 exits non-zero when any ``metrics`` value drifted more than
 ``--tolerance`` (default 10%) in the *bad* direction:
 
-* names containing ``util`` / ``eff`` / ``goodput`` / ``qps`` are
-  better-higher — a drop fails (goodput and saturation-knee QPS come
-  from the online sustained-load rows);
+* names containing ``util`` / ``eff`` / ``goodput`` / ``qps`` /
+  ``speedup`` are better-higher — a drop fails (goodput and
+  saturation-knee QPS come from the online sustained-load rows,
+  speedups from the tuned-dispatch ``tuned|*`` rows);
 * everything else (``makespan``, ``ttft_*``, ``itl_*``, ``cycles``,
   ``*_seconds``, ``preemptions``) is better-lower — a rise fails.
 
@@ -31,7 +32,7 @@ import sys
 BENCH_FILES = ("BENCH_serving.json", "BENCH_cluster.json")
 
 #: metric-name fragments where higher is better (drops regress).
-_HIGHER_BETTER = ("util", "eff", "goodput", "qps")
+_HIGHER_BETTER = ("util", "eff", "goodput", "qps", "speedup")
 
 
 def higher_is_better(name: str) -> bool:

@@ -47,9 +47,12 @@ Typical use::
 from repro.backend.base import (Backend, DispatchHandle, ExecResult,
                                 MatMulOperands, NO_MATMUL_OPERANDS)
 from repro.backend.registry import (ALIASES, available,
-                                    default_matmul_backend, get,
-                                    matmul_backend_string, register,
-                                    resolve, set_default_matmul_backend)
+                                    default_matmul_backend, dispatch_platform,
+                                    get, get_tuned, matmul_backend_string,
+                                    register, resolve,
+                                    set_default_matmul_backend,
+                                    set_dispatch_platform, set_tuned_dispatch,
+                                    tuned_config, tuned_dispatch_enabled)
 
 # Importing the implementation modules registers them.
 from repro.backend.eager import JaxBackend, PallasBackend
@@ -61,9 +64,10 @@ from repro.backend.sharded_backend import ShardedBackend
 __all__ = [
     "Backend", "DispatchHandle", "ExecResult", "MatMulOperands",
     "NO_MATMUL_OPERANDS",
-    "ALIASES", "available", "default_matmul_backend", "get",
-    "matmul_backend_string", "register", "resolve",
-    "set_default_matmul_backend",
+    "ALIASES", "available", "default_matmul_backend", "dispatch_platform",
+    "get", "get_tuned", "matmul_backend_string", "register", "resolve",
+    "set_default_matmul_backend", "set_dispatch_platform",
+    "set_tuned_dispatch", "tuned_config", "tuned_dispatch_enabled",
     "JaxBackend", "PallasBackend", "DESimBackend", "AnalyticalBackend",
     "ClusterDESimBackend", "ShardedBackend",
 ]

@@ -53,16 +53,14 @@ class AnalyticalBackend(PartitionedBackend):
     models_time = True
 
     def __init__(self, units: int = 1, strategy: str = "row-panel",
-                 k_stream: "bool | None" = None, **kw):
-        """``k_stream=None`` resolves per form: the cluster closed form
-        is chunk-aware (matches ``desim-cluster``'s default K-streamed
-        machine), while the single-unit form defaults off so the ~1%
-        parity pins against the classic whole-tile-fill ``simulate_graph``
-        hold unchanged.  Pass ``k_stream=True`` with ``units=1`` to fold
-        the first-chunk fill term into the single-unit closed form
-        (parity vs the K-streamed 1-unit DES is pinned ≤5%)."""
-        if k_stream is None:
-            k_stream = units != 1 or kw.get("topology") is not None
+                 k_stream: bool = True, **kw):
+        """``k_stream`` defaults on for every form — the single-unit
+        closed form folds the first-chunk fill term exactly like the
+        cluster form, matching the K-streamed machine ``simulate_graph``
+        runs (parity re-baselined in ``tests/test_backend.py``, now
+        within float noise on the GEMM regime).  ``k_stream=False``
+        restores the legacy whole-tile-fill pricing for graphs simulated
+        on a ``ClusterTopology(k_stream=False)`` machine."""
         super().__init__(units=units, strategy=strategy,
                          k_stream=k_stream, **kw)
 

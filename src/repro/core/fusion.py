@@ -156,8 +156,9 @@ def cute_matmul(a: jax.Array, b: jax.Array, *,
 
     ``backend`` is a ``cute_matmul`` route string (``"xla"``,
     ``"pallas"``, ``"auto"``); ``None`` resolves the process-wide default
-    from the ``repro.backend`` registry
-    (``set_default_matmul_backend`` re-routes the whole model zoo).
+    from the ``repro.backend`` registry with tuned-dispatch precedence:
+    ``set_default_matmul_backend`` wins, else a route the current
+    platform's tuning cache pins for this shape class, else ``"xla"``.
 
     ``epilogue.transpose`` equivalent: the paper's result-transpose flag is
     expressed by the caller transposing the (cheap, fused) output — XLA
@@ -165,7 +166,9 @@ def cute_matmul(a: jax.Array, b: jax.Array, *,
     """
     if backend is None:
         from repro.backend import matmul_backend_string   # lazy: no cycle
-        backend = matmul_backend_string()
+        m = a.shape[-2] if a.ndim >= 2 else 1
+        backend = matmul_backend_string(
+            shape=(m, b.shape[-1], a.shape[-1]))
     if policy is None:
         policy = _infer_policy(a)
     if backend == "auto":

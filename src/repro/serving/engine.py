@@ -320,7 +320,7 @@ class ServingEngine:
 
     def plan(self, max_new_tokens: int = 32, units: int = 1,
              policy: str = "full-prefill", overlap: str = "chained",
-             **policy_kw) -> BatchSchedule:
+             tuned: bool = False, **policy_kw) -> BatchSchedule:
         """Plan the continuous-batching drain of the current queue
         (non-destructive) under a :mod:`repro.serving.scheduler` batching
         policy.  The default ``full-prefill`` reproduces the classic
@@ -339,7 +339,13 @@ class ServingEngine:
         ``overlap`` selects the step-chaining mode the schedule lowers
         with (``"chained"`` serial / ``"relaxed"`` true data hazards
         only — see :class:`BatchSchedule`); ignored by ``policy="auto"``
-        which sweeps both."""
+        which sweeps both.
+
+        ``tuned=True`` consults the per-platform tuning cache
+        (``repro.backend.tuned_config``) for this schedule's shape
+        bucket and applies the cached ``overlap`` choice — explicit
+        ``overlap`` still loses to the tuned one only on this opt-in
+        path; the default stays exactly the untuned plan."""
         from repro.serving import scheduler
         from repro.sim.lower import OVERLAP_MODES
         if overlap not in OVERLAP_MODES:
@@ -357,16 +363,26 @@ class ServingEngine:
             if extra:
                 kw["policy_kw"] = {**extra, **kw.get("policy_kw", {})}
             sched, _ = scheduler.select_schedule(ctx, **kw)
-            self._record_plan(sched)
-            return sched
-        pol = scheduler.get_policy(policy, **policy_kw)
-        sched = pol.schedule(ctx)
-        if not getattr(pol, "meta", False):
-            # meta-policies (auto-slo) sweep overlap themselves; the
-            # caller's default must not clobber their choice.
-            sched.overlap = overlap
+        else:
+            pol = scheduler.get_policy(policy, **policy_kw)
+            sched = pol.schedule(ctx)
+            if not getattr(pol, "meta", False):
+                # meta-policies (auto-slo) sweep overlap themselves; the
+                # caller's default must not clobber their choice.
+                sched.overlap = overlap
+        if tuned:
+            self._apply_tuned_overlap(sched)
         self._record_plan(sched)
         return sched
+
+    @staticmethod
+    def _apply_tuned_overlap(sched) -> None:
+        """Fold the tuning cache's overlap choice for this schedule's
+        bucket into the plan (no-op when the bucket is untuned)."""
+        from repro import backend
+        cfg = backend.tuned_config(sched=sched)
+        if cfg is not None and cfg.overlap:
+            sched.overlap = cfg.overlap
 
     def _record_plan(self, sched) -> None:
         """Planning counters (no-ops while the registry is disabled)."""
@@ -393,6 +409,7 @@ class ServingEngine:
                           policy: str = "full-prefill",
                           overlap: str = "chained",
                           workload: bool = True,
+                          tuned: bool = False,
                           **backend_kwargs):
         """Price the planned schedule on a modelling backend.
 
@@ -420,15 +437,15 @@ class ServingEngine:
         """
         units = 1 if units is None else units
         sched = self.plan(max_new_tokens, units=units, policy=policy,
-                          overlap=overlap)
+                          overlap=overlap, tuned=tuned)
         return sched, self.run_schedule(
             sched, backend_name=backend_name, operands=operands,
-            workload=workload, **backend_kwargs)
+            workload=workload, tuned=tuned, **backend_kwargs)
 
     def run_schedule(self, sched: BatchSchedule,
                      backend_name: str = "desim", operands=None,
                      workload: bool = True, attach_spans: bool = True,
-                     **backend_kwargs):
+                     tuned: bool = False, **backend_kwargs):
         """Price an already-planned schedule on a modelling backend —
         the execution half of :meth:`evaluate_schedule`, callable with a
         schedule from any source (the online loop re-plans its own
@@ -436,15 +453,28 @@ class ServingEngine:
         so spans/metrics stay grounded in the same DES path).  Returns
         the :class:`~repro.backend.base.ExecResult`; ``attach_spans``
         controls the :class:`~repro.obs.SpanLog` join (the online loop
-        assembles its own global log across epochs instead)."""
+        assembles its own global log across epochs instead).
+
+        ``tuned=True`` resolves the backend through
+        ``repro.backend.get_tuned``: the platform's cached winner for
+        this schedule's bucket supplies granularity / fusion /
+        K-streaming / tile kwargs (plus the overlap lowering mode,
+        applied to the schedule), and any explicit ``backend_kwargs``
+        still win over the cache."""
         from repro import backend
         from repro.serving.scheduler import backend_kwargs_for
+        if tuned:
+            self._apply_tuned_overlap(sched)
         backend_kwargs = backend_kwargs_for(sched, units=sched.units,
                                             **backend_kwargs)
         # the schedule records the partition it was actually priced
         # under, so downstream latency timelines agree with the pricing.
         sched.strategy = backend_kwargs.get("strategy", sched.strategy)
-        eng = backend.get(backend_name, **backend_kwargs)
+        if tuned:
+            eng = backend.get_tuned(backend_name, sched=sched,
+                                    **backend_kwargs)
+        else:
+            eng = backend.get(backend_name, **backend_kwargs)
         if not eng.models_time:
             raise ValueError(
                 f"backend {backend_name!r} executes but does not model "

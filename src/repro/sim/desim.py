@@ -439,14 +439,14 @@ def simulate_graph(graph: TaskGraph, unit: MatrixUnitConfig,
                    vector_unit: VectorUnit = SATURN_512,
                    machine: Optional[Machine] = None) -> DESimResult:
     """Run ``graph`` to completion on the classic single-unit machine
-    (``n_units=1``, dedicated FCFS loader, whole-tile fills); returns
+    (``n_units=1``, dedicated FCFS loader, K-streamed fills — the same
+    chunked scratchpad streaming every cluster machine uses); returns
     timelines + utilization."""
     if machine is not None:
         unit, platform = machine.unit, machine.platform
         vector_unit = machine.vector_unit
     topo = ClusterTopology(n_units=1, unit=unit, platform=platform,
-                           vector=vector_unit, loader_policy="fcfs",
-                           k_stream=False)
+                           vector=vector_unit, loader_policy="fcfs")
     return simulate_cluster(graph, topo)
 
 

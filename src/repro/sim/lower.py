@@ -188,12 +188,16 @@ def workload_to_graph(unit: MatrixUnitConfig, layers: "list[LayerTrace]", *,
 def schedule_to_graph(unit: MatrixUnitConfig, sched, *,
                       fused: bool = True,
                       granularity: Granularity = Granularity.TILE,
-                      platform: CpuPlatform = SHUTTLE) -> TaskGraph:
+                      platform: CpuPlatform = SHUTTLE,
+                      overlap: "Optional[str]" = None) -> TaskGraph:
     """Lower a serving ``BatchSchedule`` with its own overlap mode,
     hazard deps and arrival-derived release times — the schedule-aware
     form of :func:`workload_to_graph` every backend's ``lower()`` uses
-    when handed a schedule instead of bare layers."""
-    overlap = getattr(sched, "overlap", "chained")
+    when handed a schedule instead of bare layers.  ``overlap``
+    overrides the schedule's recorded mode without mutating it (the
+    tuned-dispatch path re-lowers one plan under a cached overlap
+    choice)."""
+    overlap = overlap or getattr(sched, "overlap", "chained")
     return workload_to_graph(
         unit, list(sched.layers), fused=fused, granularity=granularity,
         platform=platform, overlap=overlap,

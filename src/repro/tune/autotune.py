@@ -1,0 +1,250 @@
+"""Model-guided kernel autotuner: the model proposes, measurement
+disposes.
+
+The contention-aware analytical closed form prices the *entire*
+candidate space for pennies (microseconds per candidate); the ranked
+top-K then goes to the discrete-event simulator, whose tile-by-tile
+timelines decide the winner.  This is the paper's design loop run at
+software speed: the analytical model is trusted to *order* candidates,
+never to elect one.
+
+Winner election is restricted to measured candidates whose analytical
+price does not exceed the untuned default's — the default itself is
+always measured — so two invariants hold by construction:
+
+* the winner is never slower than the default on the DES
+  (``speedup >= 1``), and
+* the winner is never slower than the default on the analytical model
+  (``analytical_speedup >= 1``) — the cheap CI smoke check.
+
+Run as a module for the CI smoke job / cache regeneration::
+
+    python -m repro.tune.autotune --platform shuttle --budget 20 --check
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional
+
+from repro.core.config import CASE_STUDY
+from repro.core.hardware import PLATFORMS
+from repro.sim.desim import simulate_cluster
+from repro.sim.resources import ClusterTopology
+from repro.tune import regime
+from repro.tune.cache import cache_path, dump_cache, save_cache
+from repro.tune.space import (DEFAULT_CONFIG, TunedConfig, gemm_candidates,
+                              schedule_bucket, schedule_candidates)
+
+#: how many analytically-ranked candidates the DES re-measures.
+TOP_K = 4
+
+#: representative GEMM-bucket row counts (decode: one row per in-flight
+#: sequence at the regime's batch width; prefill: a full chunk).
+DECODE_TOKENS = 4
+PREFILL_TOKENS = 256
+
+
+def _cycles(res) -> float:
+    return float(res.cycles if hasattr(res, "cycles") else res["cycles"])
+
+
+# ---------------------------------------------------------------------------
+# Pricing: analytical proposer / DES disposer.
+# ---------------------------------------------------------------------------
+
+def price_workload(layers, cfg: TunedConfig, platform,
+                   unit=CASE_STUDY) -> float:
+    """Proposer price of a LayerTrace workload under candidate ``cfg``."""
+    from repro import backend
+    eng = backend.get("analytical", **cfg.backend_kwargs(unit, platform))
+    return _cycles(eng.run_graph(eng.lower(layers)))
+
+
+def measure_workload(layers, cfg: TunedConfig, platform,
+                     unit=CASE_STUDY) -> float:
+    """Disposer price: the single-unit DES machine (dedicated FCFS
+    loader), honouring the candidate's ``k_stream`` choice."""
+    from repro import backend
+    eng = backend.get("analytical", **cfg.backend_kwargs(unit, platform))
+    topo = ClusterTopology(n_units=1, unit=eng.unit, platform=eng.platform,
+                           vector=eng.vector, loader_policy="fcfs",
+                           k_stream=cfg.k_stream)
+    return float(simulate_cluster(eng.lower(layers), topo).cycles)
+
+
+def _apply_overlap(sched, cfg: TunedConfig):
+    import dataclasses
+    if cfg.overlap and cfg.overlap != sched.overlap:
+        sched = dataclasses.replace(sched, overlap=cfg.overlap)
+    return sched
+
+
+def _schedule_engine(sched, cfg: TunedConfig, platform, backend_name: str,
+                     unit=CASE_STUDY):
+    from repro import backend
+    from repro.serving.scheduler import backend_kwargs_for
+    sched = _apply_overlap(sched, cfg)
+    kw = backend_kwargs_for(sched, **cfg.backend_kwargs(unit, platform))
+    return backend.get(backend_name, **kw), sched
+
+
+def price_schedule(sched, cfg: TunedConfig, platform,
+                   unit=CASE_STUDY) -> float:
+    """Proposer price of a serving schedule: the analytical cluster form
+    (M/G/1-PS loader contention) on the candidate-lowered graph."""
+    eng, sched = _schedule_engine(sched, cfg, platform, "analytical", unit)
+    return _cycles(eng.run_graph(eng.lower(sched)))
+
+
+def measure_schedule(sched, cfg: TunedConfig, platform,
+                     unit=CASE_STUDY) -> float:
+    """Disposer price: the cluster DES on the same candidate lowering."""
+    eng, sched = _schedule_engine(sched, cfg, platform, "desim-cluster", unit)
+    return _cycles(eng.run_graph(eng.lower(sched)))
+
+
+# ---------------------------------------------------------------------------
+# The propose / dispose loop.
+# ---------------------------------------------------------------------------
+
+def autotune_bucket(work, candidates, platform, *,
+                    price, measure, budget: Optional[int] = None,
+                    top_k: int = TOP_K, unit=CASE_STUDY) -> dict:
+    """Tune one (workload, candidate list) pair; returns a cache entry.
+
+    ``budget`` truncates the deterministic candidate list (the untuned
+    default is index 0, so any budget >= 1 keeps the comparison
+    meaningful).  Ties — analytical and DES — resolve toward the lower
+    candidate index, i.e. toward the default, so reruns are stable.
+    """
+    cands = list(candidates)
+    if budget is not None:
+        cands = cands[:max(1, budget)]
+    if cands[0] != DEFAULT_CONFIG:
+        raise ValueError("candidate list must lead with the default")
+
+    proposed = [(price(work, c, platform, unit), i, c)
+                for i, c in enumerate(cands)]
+    default_analytical = proposed[0][0]
+    ranked = sorted(proposed, key=lambda t: (t[0], t[1]))
+    short = ranked[:max(1, top_k)]
+    if all(c != DEFAULT_CONFIG for _, _, c in short):
+        short.append(proposed[0])
+
+    measured = [(measure(work, c, platform, unit), a, i, c)
+                for a, i, c in short]
+    # Election: DES-best among candidates the model does not price worse
+    # than the default (the default always qualifies) — keeps both the
+    # DES and the analytical speedup >= 1 by construction.
+    eligible = [t for t in measured if t[1] <= default_analytical]
+    des, analytical, _, winner = min(eligible, key=lambda t: (t[0], t[2]))
+    default_des = next(t[0] for t in measured if t[3] == DEFAULT_CONFIG)
+
+    return {
+        "config": winner.to_dict(),
+        "metrics": {
+            "analytical_cycles": analytical,
+            "default_analytical_cycles": default_analytical,
+            "desim_cycles": des,
+            "default_desim_cycles": default_des,
+            "speedup": default_des / des,
+            "analytical_speedup": default_analytical / analytical,
+        },
+        "proposed": len(cands),
+        "measured": len(measured),
+    }
+
+
+def autotune_platform(platform_name: str, *, budget: Optional[int] = None,
+                      top_k: int = TOP_K, units: int = regime.UNITS,
+                      buckets=None) -> dict:
+    """Tune every bucket of one platform; returns ``{bucket: entry}``.
+
+    Buckets: ``gemm|decode`` and ``gemm|prefill`` tune a representative
+    serving-step layer (the model's four projection GEMMs + epilogue
+    vector work) at skinny and deep M; ``sched|u{units}|decode`` tunes
+    the whole canonical decode-regime schedule, where the overlap mode
+    joins the space.
+    """
+    from repro.serving.engine import _step_layer
+
+    platform = PLATFORMS[platform_name]
+    unit = CASE_STUDY
+    cfg, sched = regime.decode_regime_schedule(units=units)
+    reps = {
+        "gemm|decode": [_step_layer(cfg, "tune-decode", DECODE_TOKENS, 1)],
+        "gemm|prefill": [_step_layer(cfg, "tune-prefill", PREFILL_TOKENS, 1)],
+    }
+    sched_key = schedule_bucket(sched)
+
+    entries = {}
+    for key in buckets or (*reps, sched_key):
+        if key in reps:
+            entries[key] = autotune_bucket(
+                reps[key], gemm_candidates(unit), platform,
+                price=price_workload, measure=measure_workload,
+                budget=budget, top_k=top_k, unit=unit)
+        elif key == sched_key:
+            entries[key] = autotune_bucket(
+                sched, schedule_candidates(unit), platform,
+                price=price_schedule, measure=measure_schedule,
+                budget=budget, top_k=top_k, unit=unit)
+        else:
+            raise ValueError(f"unknown bucket {key!r}; known: "
+                             f"{sorted((*reps, sched_key))}")
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# CLI — cache regeneration and the CI smoke check.
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="model-guided autotune: write per-platform tuning "
+                    "caches and/or check their invariants")
+    ap.add_argument("--platform", choices=sorted(PLATFORMS), action="append",
+                    help="platform(s) to tune (default: all four)")
+    ap.add_argument("--budget", type=int, default=None,
+                    help="max candidates per bucket (default: full space)")
+    ap.add_argument("--top-k", type=int, default=TOP_K,
+                    help="analytically-ranked candidates the DES measures")
+    ap.add_argument("--bucket", action="append",
+                    help="restrict to specific bucket key(s)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the cache document instead of writing it")
+    ap.add_argument("--check", action="store_true",
+                    help="assert tuned >= untuned on both models")
+    args = ap.parse_args(argv)
+
+    failures = []
+    for name in args.platform or sorted(PLATFORMS):
+        entries = autotune_platform(name, budget=args.budget,
+                                    top_k=args.top_k, buckets=args.bucket)
+        if args.dry_run:
+            sys.stdout.write(dump_cache(name, entries))
+        else:
+            path = save_cache(name, entries)
+            print(f"wrote {path}")
+        for bucket, e in entries.items():
+            m = e["metrics"]
+            line = (f"{name:10s} {bucket:16s} -> {e['config'] or 'default'} "
+                    f"speedup {m['speedup']:.3f} "
+                    f"(analytical {m['analytical_speedup']:.3f}, "
+                    f"{e['proposed']} proposed / {e['measured']} measured)")
+            print(line)
+            if args.check:
+                if m["analytical_speedup"] < 1.0 or m["speedup"] < 1.0:
+                    failures.append(line)
+    if failures:
+        print("FAIL: tuned slower than untuned default:", file=sys.stderr)
+        for line in failures:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -156,7 +156,11 @@ class TestExecutionParity:
 
 
 class TestMakespanParity:
-    """analytical asserts the makespan the DES derives — within ~1%."""
+    """analytical asserts the makespan the DES derives.  Re-baselined
+    for the K-streamed default (both sides now stream K chunks): the
+    legacy ~1% pins tightened to float noise on the GEMM regime and
+    ≤1% on the fused-epilogue regime (layer granularity exposes the
+    whole epilogue, the one place the closed form still approximates)."""
 
     @pytest.mark.parametrize("shape", [(256, 256, 1024), (512, 512, 4096),
                                        (512, 512, 8192)])
@@ -166,8 +170,8 @@ class TestMakespanParity:
         g = desim.lower(MatMulTask(m=m, n=n, k=k))
         rd, ra = desim.run_graph(g), ana.run_graph(g)
         assert rd.cycles > 0
-        assert abs(ra.cycles / rd.cycles - 1.0) < 0.01
-        assert abs(ra.utilization - rd.utilization) < 0.01
+        assert abs(ra.cycles / rd.cycles - 1.0) < 0.001
+        assert abs(ra.utilization - rd.utilization) < 0.001
 
     @pytest.mark.parametrize("gran", ["tile", "panel", "layer"])
     def test_fused_epilogue_regime(self, gran):
@@ -176,14 +180,14 @@ class TestMakespanParity:
         ana = backend.get("analytical", granularity=gran)
         g = desim.lower(MatMulTask(m=256, n=512, k=1024), epilogue=ep)
         rel = ana.run_graph(g).cycles / desim.run_graph(g).cycles - 1.0
-        assert abs(rel) < 0.015
+        assert abs(rel) < 0.01
 
     def test_dispatch_path_agrees_too(self):
         task = MatMulTask(m=512, n=512, k=4096)
         rd = backend.get("desim").wait(backend.get("desim").dispatch(task))
         ra = backend.get("analytical").wait(
             backend.get("analytical").dispatch(task))
-        assert abs(ra.cycles / rd.cycles - 1.0) < 0.01
+        assert abs(ra.cycles / rd.cycles - 1.0) < 0.001
 
     def test_run_workload_same_shape_dict(self):
         from repro.core.simulator import LayerTrace
@@ -247,11 +251,14 @@ class TestServingSchedule:
             assert (np.asarray(rd.outputs[label]) == ref).all(), label
 
     def test_analytical_agrees_on_schedule(self, engine):
+        # re-baselined for the K-streamed default: serving steps tile
+        # into tiny load-bound GEMMs where the first-chunk fill fold is
+        # optimistic (~4%) — the same ≤5% band the cluster form carries.
         sched = engine.plan(max_new_tokens=4)
         desim, ana = backend.get("desim"), backend.get("analytical")
         g = desim.lower(sched.layers)
         rel = ana.run_graph(g).cycles / desim.run_graph(g).cycles - 1.0
-        assert abs(rel) < 0.02
+        assert abs(rel) < 0.05
 
     def test_rejects_executing_backend(self, engine):
         with pytest.raises(ValueError):

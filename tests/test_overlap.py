@@ -287,18 +287,22 @@ class TestKStreamClosedForm:
                           k_stream=True).run_graph(g)
         assert abs(ana.cycles / des.cycles - 1.0) <= 0.05
 
-    def test_single_unit_default_stays_whole_tile(self):
-        """backend.get("analytical") keeps the classic fills, so the ~1%
-        parity pins vs simulate_graph hold unchanged."""
+    def test_single_unit_default_is_k_streamed(self):
+        """backend.get("analytical") defaults k_stream on (the legacy
+        whole-tile auto-default is gone), and the re-baselined parity
+        vs the K-streamed ``simulate_graph`` machine is tighter than
+        the old ~1% pin."""
         eng = backend.get("analytical")
-        assert eng.k_stream is False
+        assert eng.k_stream is True
         task = MatMulTask(m=256, n=256, k=4096)
         g, _ = build_gemm_graph(task, CASE_STUDY.m_scp, CASE_STUDY.n_scp)
         des = simulate_graph(g, CASE_STUDY, SHUTTLE)
-        assert abs(eng.run_graph(g).cycles / des.cycles - 1.0) < 0.01
+        assert abs(eng.run_graph(g).cycles / des.cycles - 1.0) < 0.005
 
     def test_cluster_form_defaults_chunk_aware(self):
         assert backend.get("analytical", units=2).k_stream is True
+        # the explicit opt-out (legacy whole-tile fills) still exists
+        assert backend.get("analytical", k_stream=False).k_stream is False
 
 
 class TestStepSpans:

@@ -1,0 +1,322 @@
+"""The autotuner, its cache, and the tuned capability dispatch.
+
+Covers the PR's acceptance pins: tuned dispatch beats the untuned
+default on cluster-DES makespan for the Llama-style decode regime on
+every platform config (>= 2 required), the epilogue-fusion contribution
+is isolated and pinned, same-config autotune reruns are byte-
+deterministic, and the fused-epilogue execution path stays int8
+bit-exact against the unfused matmul+vector reference on every
+executing backend x granularity — including through the tuned dispatch.
+"""
+
+import dataclasses
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backend, tune
+from repro.core.config import CASE_STUDY
+from repro.core.fusion import NO_OPERANDS, Epilogue, apply_epilogue
+from repro.core.hardware import PLATFORMS
+from repro.core.task import MatMulTask
+from repro.sim.graph import Granularity
+from repro.tune import autotune, regime
+from repro.tune.space import DEFAULT_CONFIG, TunedConfig
+
+
+def int8_pair(key, m, n, k):
+    ka, kb = jax.random.split(key)
+    return (jax.random.randint(ka, (m, k), -8, 8, jnp.int8),
+            jax.random.randint(kb, (k, n), -8, 8, jnp.int8))
+
+
+class TestSpace:
+    def test_default_config_roundtrips_empty(self):
+        assert DEFAULT_CONFIG.to_dict() == {}
+        assert TunedConfig.from_dict({}) == DEFAULT_CONFIG
+
+    def test_sparse_roundtrip(self):
+        cfg = TunedConfig(granularity="panel", k_stream=False)
+        d = cfg.to_dict()
+        assert d == {"granularity": "panel", "k_stream": False}
+        assert TunedConfig.from_dict(d) == cfg
+
+    def test_unknown_field_rejected(self):
+        with pytest.raises(ValueError, match="unknown TunedConfig"):
+            TunedConfig.from_dict({"tile_q": 3})
+
+    def test_shape_buckets(self):
+        assert tune.shape_bucket(4, 4096, 4096) == "decode"
+        assert tune.shape_bucket(32, 64, 64) == "decode"
+        assert tune.shape_bucket(33, 64, 64) == "prefill"
+        assert tune.bucket_of_task(MatMulTask(m=512, n=512, k=512)) \
+            == "gemm|prefill"
+
+    def test_schedule_bucket_decode_heavy(self):
+        _, sched = regime.decode_regime_schedule()
+        assert tune.schedule_bucket(sched) == "sched|u2|decode"
+
+    def test_candidates_lead_with_default_and_dedupe(self):
+        for cands in (tune.gemm_candidates(CASE_STUDY),
+                      tune.schedule_candidates(CASE_STUDY)):
+            assert cands[0] == DEFAULT_CONFIG
+            assert len(cands) == len(set(cands))
+            # deterministic order: the space is a pure function.
+        assert tune.gemm_candidates(CASE_STUDY) \
+            == tune.gemm_candidates(CASE_STUDY)
+
+    def test_backend_kwargs_apply_tile_cut(self):
+        cfg = TunedConfig(tile_m=32, granularity="layer", fused=False)
+        kw = cfg.backend_kwargs(CASE_STUDY)
+        assert kw["unit"].m_scp == 32
+        assert kw["unit"].n_scp == CASE_STUDY.n_scp
+        assert kw["granularity"] == "layer" and kw["fused"] is False
+
+
+class TestCache:
+    ENTRY = {"config": {"granularity": "panel"},
+             "metrics": {"speedup": 1.25, "desim_cycles": 123.4567891}}
+
+    def test_save_load_roundtrip(self, tmp_path):
+        tune.save_cache("shuttle", {"sched|u2|decode": self.ENTRY},
+                        cache_dir=tmp_path)
+        loaded = tune.load_cache("shuttle", cache_dir=tmp_path)
+        assert loaded["sched|u2|decode"]["config"] == {"granularity": "panel"}
+        # floats are rounded on write (byte-determinism contract).
+        assert loaded["sched|u2|decode"]["metrics"]["desim_cycles"] == 123.457
+
+    def test_dump_is_byte_deterministic(self):
+        a = tune.dump_cache("boom", {"gemm|decode": self.ENTRY})
+        b = tune.dump_cache("boom", {"gemm|decode": dict(self.ENTRY)})
+        assert a == b and a.endswith("\n")
+
+    def test_missing_or_mismatched_schema_degrades_to_untuned(self, tmp_path):
+        assert tune.load_cache("rocket", cache_dir=tmp_path) == {}
+        p = tmp_path / "rocket.json"
+        p.write_text('{"schema_version": 999, "entries": {"x": {}}}')
+        assert tune.load_cache("rocket", cache_dir=tmp_path) == {}
+        assert tune.lookup("rocket", "x", cache_dir=tmp_path) is None
+        tune.clear_memo()
+
+    def test_lookup_resolves_config(self, tmp_path):
+        tune.save_cache("boom", {"gemm|decode": self.ENTRY},
+                        cache_dir=tmp_path)
+        cfg = tune.lookup("boom", "gemm|decode", cache_dir=tmp_path)
+        assert cfg == TunedConfig(granularity="panel")
+        assert tune.lookup("boom", "gemm|prefill", cache_dir=tmp_path) is None
+        tune.clear_memo()
+
+    @pytest.mark.parametrize("plat", sorted(PLATFORMS))
+    def test_committed_caches_self_consistent(self, plat):
+        entries = tune.load_cache(plat)
+        assert entries, f"no committed tuning cache for {plat}"
+        assert {"gemm|decode", "gemm|prefill", "sched|u2|decode"} \
+            <= set(entries)
+        for bucket, e in entries.items():
+            m = e["metrics"]
+            assert m["speedup"] >= 1.0, (plat, bucket)
+            assert m["analytical_speedup"] >= 1.0, (plat, bucket)
+            TunedConfig.from_dict(e["config"])    # parses
+
+
+class TestAutotune:
+    def test_budget_truncates_but_keeps_default(self):
+        plat = PLATFORMS["shuttle"]
+        entry = autotune.autotune_bucket(
+            [next(iter(_decode_layers()))], tune.gemm_candidates(CASE_STUDY),
+            plat, price=autotune.price_workload,
+            measure=autotune.measure_workload, budget=1, top_k=2)
+        assert entry["proposed"] == 1
+        assert entry["config"] == {}          # only the default competed
+        assert entry["metrics"]["speedup"] == 1.0
+
+    def test_rerun_is_byte_identical(self):
+        docs = []
+        for _ in range(2):
+            entries = autotune.autotune_platform(
+                "shuttle", budget=8, buckets=["gemm|decode"])
+            docs.append(tune.dump_cache("shuttle", entries))
+        assert docs[0] == docs[1]
+
+    def test_election_invariants_small_budget(self):
+        entries = autotune.autotune_platform("kunminghu", budget=6)
+        for bucket, e in entries.items():
+            m = e["metrics"]
+            assert m["speedup"] >= 1.0, bucket
+            assert m["analytical_speedup"] >= 1.0, bucket
+            assert e["proposed"] == 6 and e["measured"] >= 1
+
+
+def _decode_layers():
+    from repro.configs.registry import get_config
+    from repro.serving.engine import _step_layer
+    cfg = get_config("yi-6b", reduced=True)
+    return [_step_layer(cfg, "tune-decode", autotune.DECODE_TOKENS, 1)]
+
+
+class TestDispatch:
+    """Precedence: explicit argument > tuned cache > untuned default."""
+
+    def test_tuned_config_resolves_committed_cache(self):
+        cfg = backend.tuned_config(shape=(4, 4096, 4096))
+        assert cfg is not None and cfg.k_stream is False
+        _, sched = regime.decode_regime_schedule()
+        cfg = backend.tuned_config(sched=sched)
+        assert cfg is not None and cfg.granularity == "panel"
+
+    def test_get_tuned_applies_cache(self):
+        _, sched = regime.decode_regime_schedule()
+        eng = backend.get_tuned("desim-cluster", sched=sched, units=2)
+        assert eng.granularity is Granularity.PANEL
+
+    def test_explicit_argument_wins(self):
+        _, sched = regime.decode_regime_schedule()
+        eng = backend.get_tuned("desim-cluster", sched=sched, units=2,
+                                granularity="layer")
+        assert eng.granularity is Granularity.LAYER
+
+    def test_untuned_fallback_on_unknown_bucket(self):
+        eng = backend.get_tuned("analytical", bucket="sched|u7|prefill")
+        assert eng.granularity is Granularity.TILE and eng.fused
+
+    def test_kstream_dropped_for_single_unit_backends(self):
+        # gemm|decode pins k_stream=False, which only cluster-aware
+        # engines accept; the dispatch must not crash 'desim'/'jax'.
+        eng = backend.get_tuned("desim", shape=(4, 4096, 4096))
+        assert not eng.supports_units
+
+    def test_disable_toggle(self):
+        prev = backend.set_tuned_dispatch(False)
+        try:
+            assert backend.tuned_config(shape=(4, 4096, 4096)) is None
+            eng = backend.get_tuned("analytical", shape=(4, 4096, 4096))
+            assert eng.k_stream is True       # untuned default
+        finally:
+            backend.set_tuned_dispatch(prev)
+
+    def test_dispatch_platform_validated(self):
+        assert backend.dispatch_platform() in PLATFORMS
+        with pytest.raises(KeyError):
+            backend.set_dispatch_platform("pentium")
+        prev = backend.set_dispatch_platform("kunminghu")
+        try:
+            assert backend.dispatch_platform() == "kunminghu"
+        finally:
+            backend.set_dispatch_platform(prev)
+
+    def test_matmul_route_untouched_without_pin(self):
+        # no committed cache pins a route, so the shape-aware resolution
+        # falls through to the zoo default.
+        assert backend.matmul_backend_string(shape=(4, 4096, 4096)) == "xla"
+        assert backend.matmul_backend_string() == "xla"
+
+
+class TestDecodeRegime:
+    """The pinned end-to-end win (ISSUE acceptance): tuned dispatch
+    beats the untuned default on cluster-DES makespan for the canonical
+    Llama-style decode regime, on >= 2 platform configs, with the
+    epilogue-fusion contribution isolated."""
+
+    @pytest.mark.parametrize("plat", sorted(PLATFORMS))
+    def test_tuned_beats_untuned_on_des(self, plat):
+        m = regime.measure_decode_regime(plat)
+        assert m["tuned_speedup"] >= 1.10, (plat, m)
+        # fusion dominates: >2x with every other tuned knob held fixed
+        # (the paper attributes >30% of its serving win to fusion).
+        assert m["fusion_speedup"] >= 2.0, (plat, m)
+        assert m["speedup"] >= m["tuned_speedup"], (plat, m)
+
+    def test_bench_rows_match_live_measurement(self):
+        import json
+        import pathlib
+        doc = json.loads((pathlib.Path(__file__).parent.parent
+                          / "BENCH_serving.json").read_text())
+        rows = {k: v["metrics"] for k, v in doc["entries"].items()
+                if k.startswith("tuned|")}
+        assert len(rows) >= 2
+        live = regime.measure_decode_regime("shuttle")
+        rec = rows["tuned|decode|shuttle"]
+        assert live["tuned"] == pytest.approx(rec["tuned"], rel=1e-9)
+        assert live["tuned_speedup"] == pytest.approx(rec["tuned_speedup"],
+                                                      rel=1e-9)
+
+    def test_engine_tuned_path_matches_regime(self):
+        _, eng = regime.decode_regime_engine()
+        sched = eng.plan(max_new_tokens=16, units=2,
+                         policy="decode-priority", tuned=True)
+        tuned = eng.run_schedule(sched, backend_name="desim-cluster",
+                                 tuned=True, workload=False)
+        plain = eng.run_schedule(
+            eng.plan(max_new_tokens=16, units=2, policy="decode-priority"),
+            backend_name="desim-cluster", workload=False)
+        assert plain.cycles / tuned.cycles >= 1.10
+
+
+class TestFusedBitExact:
+    """Satellite: fused-epilogue execution is int8 bit-exact against the
+    unfused matmul + vector reference on every executing backend x
+    granularity, including through the tuned dispatch path."""
+
+    EP = Epilogue(activation="relu", out_dtype=jnp.int32)
+
+    def _ref(self, a, b):
+        acc = jnp.matmul(a, b, preferred_element_type=jnp.int32)
+        return np.asarray(apply_epilogue(acc, self.EP, NO_OPERANDS))
+
+    @pytest.mark.parametrize("name", ["jax", "pallas", "desim"])
+    @pytest.mark.parametrize("gran", ["tile", "panel", "layer"])
+    def test_fused_matches_unfused(self, name, gran):
+        a, b = int8_pair(jax.random.PRNGKey(7), 128, 128, 256)
+        eng = backend.get(name, granularity=gran)
+        g = eng.lower(MatMulTask(m=128, n=128, k=256), epilogue=self.EP)
+        out = eng.run_graph(g, backend.MatMulOperands(a=a, b=b)).output
+        assert (np.asarray(out) == self._ref(a, b)).all()
+
+    @pytest.mark.parametrize("name", ["jax", "desim"])
+    @pytest.mark.parametrize("shape", [(16, 128, 256), (128, 128, 256)])
+    def test_tuned_dispatch_stays_bit_exact(self, name, shape):
+        # decode bucket (m=16) resolves k_stream=False from the cache;
+        # prefill (m=128) resolves the default — both must execute
+        # identically to the unfused reference.
+        m, n, k = shape
+        a, b = int8_pair(jax.random.PRNGKey(8), m, n, k)
+        eng = backend.get_tuned(name, shape=shape)
+        g = eng.lower(MatMulTask(m=m, n=n, k=k), epilogue=self.EP)
+        out = eng.run_graph(g, backend.MatMulOperands(a=a, b=b)).output
+        assert (np.asarray(out) == self._ref(a, b)).all()
+
+    def test_tuned_dispatch_bit_exact_desim_cluster(self):
+        # the cluster DES executes the same graph it times when handed
+        # operands; tuned dispatch must preserve that equivalence too.
+        a, b = int8_pair(jax.random.PRNGKey(9), 128, 128, 256)
+        eng = backend.get_tuned("desim-cluster", shape=(128, 128, 256),
+                                units=2)
+        g = eng.lower(MatMulTask(m=128, n=128, k=256), epilogue=self.EP)
+        res = eng.run_graph(g, backend.MatMulOperands(a=a, b=b))
+        if res.output is not None:
+            assert (np.asarray(res.output) == self._ref(a, b)).all()
+        assert res.cycles > 0
+
+
+class TestOnlySelector:
+    """Satellite: an unknown --only selector errors with the known
+    bench list instead of running nothing."""
+
+    def test_unknown_bench_name_lists_known(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only", "nope"],
+            capture_output=True, text=True)
+        assert proc.returncode != 0
+        err = proc.stderr
+        assert "unknown bench name(s): nope" in err
+        for known in ("table6", "serving", "tune"):
+            assert known in err
+
+    def test_comma_separated_selector_parses(self):
+        from benchmarks.run import BENCHES
+        # the selector grammar: every advertised name must stay known.
+        assert {"eq1", "tune", "serving"} <= set(BENCHES)
