@@ -72,6 +72,18 @@ ONLINE_SATURATION = ["full-prefill", "chunked-prefill",
 ONLINE_METRICS = ("ttft_p50", "ttft_p99", "itl_p50", "itl_p99",
                   "goodput_qps", "makespan", "preemptions")
 
+#: KV-pressure rows: the deterministic staggered burst (8 requests,
+#: 32..48-token prompts, one arrival per 4000 cycles) decoded by the
+#: closed loop on the DES execute path under decode-priority, with a
+#: hot pool of 10 × 8-token blocks — smaller than the aggregate working
+#: set, so eviction churn and refill pricing are exercised.  All rows
+#: ride the --quick CI subset (the ``kv`` job gates them).
+KV_POOL = dict(kv_hot_blocks=10, kv_block_tokens=8)
+KV_TRAFFIC = dict(gap=4000.0, n=8,
+                  prompt_lengths=(32, 40, 32, 48, 32, 40, 32, 48))
+KV_ENGINE = dict(max_batch=4, max_new_tokens=16, policy="decode-priority",
+                 execute_backend="desim")
+
 #: tuned-dispatch decode-regime rows: (platform, in_quick).  Two
 #: platforms with distinct dispatch models (RoCC in-order shuttle, CSR
 #: OoO kunminghu) gate the tuned win in CI; the other two ride the full
@@ -86,8 +98,8 @@ TUNED_METRICS = ("tuned", "untuned", "tuned_unfused", "untuned_unfused",
                  "speedup", "tuned_speedup", "fusion_speedup")
 
 
-def record_serving(quick: bool) -> dict:
-    from benchmarks.run import serving_queue
+def record_serving(quick: bool, backend_name: str = "analytical") -> dict:
+    from benchmarks.run import require_units_support, serving_queue
     from repro.serving.scheduler import schedule_metrics
 
     cfg, eng = serving_queue()
@@ -95,10 +107,13 @@ def record_serving(quick: bool) -> dict:
     for policy, units, overlap, in_quick in SERVING_POINTS:
         if quick and not in_quick:
             continue
+        # a u2 row priced by a single-unit backend would silently record
+        # a wrong baseline — refuse the row instead of degrading it.
+        require_units_support(backend_name, units)
         t0 = time.perf_counter()
         sched = eng.plan(max_new_tokens=16, units=units, policy=policy,
                          overlap=overlap)
-        m = schedule_metrics(sched, cfg.n_layers, "analytical")
+        m = schedule_metrics(sched, cfg.n_layers, backend_name)
         wall = time.perf_counter() - t0
         entries[f"{policy}|u{units}|{overlap}"] = {
             "metrics": {k: m[k] for k in SERVING_METRICS},
@@ -106,18 +121,75 @@ def record_serving(quick: bool) -> dict:
         }
     entries.update(record_online(quick))
     entries.update(record_tuned(quick))
+    entries.update(record_kv(quick))
     return {
         "schema_version": SCHEMA_VERSION,
         "bench": "serving",
         "config": {"model": "yi-6b-reduced", "n_requests": 6,
                    "max_batch": 2, "max_new_tokens": 16,
-                   "backend": "analytical",
+                   "backend": backend_name,
                    "online": {"traffic": "poisson seed=0",
                               "execute_backend": "analytical",
                               "max_new_tokens": 8},
                    "tuned": {"regime": "decode-priority u2",
-                             "backend": "desim-cluster"}},
+                             "backend": "desim-cluster"},
+                   "kv": {"traffic": "deterministic gap=4000 n=8",
+                          "pool": "10 x 8-token hot blocks",
+                          "execute_backend": "desim"}},
         "entries": entries,
+    }
+
+
+def record_kv(quick: bool) -> "dict[str, dict]":
+    """The KV-pressure rows: the same closed loop run three ways —
+    unlimited KV, a small hot pool with the residency-aware
+    decode-priority policy, and the same pool with residency scoring
+    disabled.  Pins the two headline effects as tracked metrics: the
+    pool makes the DES makespan visibly exceed the unlimited baseline
+    (``pressure_ratio``), and residency-aware batching beats blind on
+    decode p50 (``residency_speedup``, higher-better)."""
+    del quick                       # all three rows ride the CI subset
+    from repro.configs.registry import get_config
+    from repro.serving.arrivals import DeterministicArrivals
+    from repro.serving.online import OnlineServingEngine
+
+    cfg = get_config("yi-6b", reduced=True)
+
+    def run(**kv):
+        t0 = time.perf_counter()
+        eng = OnlineServingEngine(cfg, **KV_ENGINE, **kv)
+        res = eng.run(DeterministicArrivals(**KV_TRAFFIC))
+        return eng, res, round(time.perf_counter() - t0, 4)
+
+    _, base, w0 = run()
+    hot_eng, hot, w1 = run(**KV_POOL)
+    _, blind, w2 = run(**KV_POOL, policy_kw={"residency_aware": False})
+    stats = {r: res.ttft_stats() for r, res in
+             (("base", base), ("hot", hot), ("blind", blind))}
+    c = hot_eng.kv_cache.counters
+    return {
+        "kv|unlimited": {
+            "metrics": {"makespan": base.makespan,
+                        "ttft_p50": stats["base"]["ttft_p50"],
+                        "itl_p50": stats["base"]["itl_p50"]},
+            "info": {"wall_s": w0, "completed": len(base.requests)},
+        },
+        "kv|pressured": {
+            "metrics": {"makespan": hot.makespan,
+                        "ttft_p50": stats["hot"]["ttft_p50"],
+                        "itl_p50": stats["hot"]["itl_p50"],
+                        "pressure_ratio": hot.makespan / base.makespan,
+                        "evictions": float(c["evictions"]),
+                        "refill_bytes": c["refill_bytes"]},
+            "info": {"wall_s": w1, "completed": len(hot.requests),
+                     "trace_digest": hot_eng.kv_cache.trace_digest()},
+        },
+        "kv|residency": {
+            "metrics": {"blind_itl_p50": stats["blind"]["itl_p50"],
+                        "residency_speedup": (stats["blind"]["itl_p50"]
+                                              / stats["hot"]["itl_p50"])},
+            "info": {"wall_s": w2, "completed": len(blind.requests)},
+        },
     }
 
 

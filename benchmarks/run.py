@@ -37,10 +37,25 @@ POLICY = None
 TUNED = False
 
 
+def require_units_support(backend_name: str, units: int) -> None:
+    """Refuse a multi-unit bench row on a single-unit backend.  A bench
+    that quietly prices ``units=1`` while the row is labelled ``u2``
+    records a wrong baseline that every later run is then gated
+    against — so this is a hard error, not a skip."""
+    from repro import backend
+    if units != 1 and not backend.get(backend_name).supports_units:
+        raise ValueError(
+            f"bench row wants units={units} but backend "
+            f"{backend_name!r} models a single matrix unit; use a "
+            "cluster-aware backend ('desim-cluster', 'analytical') or "
+            "drop the row — refusing to silently record units=1")
+
+
 def workload_sim():
     """The model-level simulator the --engine registry lookup selects
     (same signature as ``core.simulator.simulate_workload``)."""
     from repro import backend
+    require_units_support(ENGINE, UNITS)
     eng = backend.get(ENGINE)
     if eng.supports_units:
         # pin the cluster width to --units (cluster backends default to

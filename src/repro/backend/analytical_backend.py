@@ -234,8 +234,12 @@ class AnalyticalBackend(PartitionedBackend):
                 cfg = topo.unit_config(u)
                 private = topo.private_bandwidth(u)
                 bpc = private / freq if private > 0 else pool_bpc
-                w = tile_work(cfg, plat, node)
-                fill_bytes = (tile_chunks(cfg, plat, node)[0][0]
+                # same row-buffer interleaving derate the DES charges
+                # shared-pool streams (private slices never interleave).
+                streams = 1 if private > 0 else topo.interleaved_streams()
+                w = tile_work(cfg, plat, node, streams=streams)
+                fill_bytes = (tile_chunks(cfg, plat, node,
+                                          streams=streams)[0][0]
                               if topo.k_stream else w["load_eff"])
                 st["tiles"].append({
                     "compute": w["compute"],

@@ -1,0 +1,100 @@
+"""Paged attention over a block-table KV layout (the vLLM idiom).
+
+The serving stack's :mod:`repro.serving.kvcache` allocator hands out
+fixed-size KV blocks from a shared physical pool; this module closes
+the execution loop: the cache lives as a **page pool** ``(P, Hkv,
+block_tokens, D)`` plus a per-sequence **block table** ``(B, n_blocks)``
+of page indices, and attention gathers the pages back into the
+contiguous ``(B, Hkv, S, D)`` layout before running *exactly* the same
+math as the contiguous reference (``decode_attention`` for the pure-jnp
+single-token path, ``flash_attention`` for the Pallas kernel).  Because
+the gather is a pure permutation of rows followed by the identical
+kernel, paged outputs are **bit-exact** against the contiguous path —
+int8 in, int8 out, no tolerance needed — which is what the parity suite
+pins across granularities and backends.
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.attention.ops import (_pad_axis, decode_attention,
+                                         flash_attention)
+
+
+def to_paged(k_cache, v_cache, block_tokens: int, *, seed: int = 0):
+    """Scatter contiguous caches ``(B, Hkv, S, D)`` into a paged pool.
+
+    Returns ``(k_pages, v_pages, block_table)`` with pages of shape
+    ``(B * n_blocks, Hkv, block_tokens, D)`` and an int32 table
+    ``(B, n_blocks)``.  ``seed`` shuffles the physical page order (the
+    allocator's seeded free list does the same), so round-tripping
+    through a *non-trivial* table is what the parity tests exercise.
+    ``S`` is zero-padded up to a block multiple; padded positions sit
+    past every ``cache_len`` so the attention mask ignores them.
+    """
+    if block_tokens < 1:
+        raise ValueError(f"block_tokens must be >= 1, got {block_tokens}")
+    if k_cache.shape != v_cache.shape:
+        raise ValueError(f"k/v shape mismatch: {k_cache.shape} vs "
+                         f"{v_cache.shape}")
+    b, hkv, s, d = k_cache.shape
+    n_blocks = -(-s // block_tokens)
+    kp = _pad_axis(k_cache, 2, block_tokens)
+    vp = _pad_axis(v_cache, 2, block_tokens)
+    total = b * n_blocks
+    # logical block i of sequence q lives at physical page perm[q*nb+i].
+    perm = list(range(total))
+    random.Random(seed).shuffle(perm)
+    perm = np.asarray(perm, dtype=np.int32)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(total, dtype=np.int32)
+
+    def paginate(x):
+        blocks = x.reshape(b, hkv, n_blocks, block_tokens, d)
+        blocks = blocks.transpose(0, 2, 1, 3, 4)
+        blocks = blocks.reshape(total, hkv, block_tokens, d)
+        return blocks[inv]                     # page p holds block inv[p]
+
+    block_table = jnp.asarray(perm.reshape(b, n_blocks))
+    return paginate(kp), paginate(vp), block_table
+
+
+def gather_paged(pages, block_table, seq_len: Optional[int] = None):
+    """Gather a paged pool back to the contiguous ``(B, Hkv, S, D)``
+    layout: ``pages[block_table]`` per sequence, blocks re-ordered by
+    table position, cropped to ``seq_len``."""
+    g = pages[block_table]                     # (B, nb, Hkv, bt, D)
+    b, nb, hkv, bt, d = g.shape
+    out = g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, nb * bt, d)
+    if seq_len is not None:
+        out = out[:, :, :seq_len]
+    return out
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_table, cache_len, *,
+                           seq_len: Optional[int] = None,
+                           sm_scale: Optional[float] = None,
+                           window: int = 0, softcap: float = 0.0):
+    """Single-token decode against a paged cache — bit-exact with
+    ``decode_attention`` on the gathered-contiguous layout (padded
+    positions past ``cache_len`` are masked before the softmax, so the
+    block-padding tail never contributes)."""
+    k = gather_paged(k_pages, block_table, seq_len)
+    v = gather_paged(v_pages, block_table, seq_len)
+    return decode_attention(q, k, v, cache_len, sm_scale=sm_scale,
+                            window=window, softcap=softcap)
+
+
+def paged_flash_attention(q, k_pages, v_pages, block_table, *,
+                          seq_len: Optional[int] = None, **kw):
+    """Prefill/chunk attention against a paged cache via the Pallas
+    flash kernel — the gather is a row permutation, so the kernel sees
+    byte-identical operands to the contiguous call."""
+    k = gather_paged(k_pages, block_table, seq_len)
+    v = gather_paged(v_pages, block_table, seq_len)
+    return flash_attention(q, k, v, **kw)

@@ -165,6 +165,14 @@ class BatchSchedule:
     requests) carry request-arrival semantics into the graph as node
     release times and into ``decode_latency_stats`` as the TTFT
     baseline.
+
+    ``refill_bytes`` (per step) carries the paged KV-cache refill each
+    step owes — stamped by :meth:`repro.serving.scheduler
+    .SchedulingPolicy._finish` from the context's residency state and
+    lowered by ``workload_to_graph`` into a ``memory`` node ahead of
+    the step's tiles, so the DES and the analytical form both price
+    evicted-block refills while JAX execution (which skips memory
+    nodes) stays bit-exact.  Empty means no tracked KV pressure.
     """
 
     steps: "list[BatchStep]"
@@ -176,6 +184,7 @@ class BatchSchedule:
     overlap: str = "chained"
     arrival_times: "tuple[float, ...]" = ()
     release_times: "tuple[float, ...]" = ()
+    refill_bytes: "tuple[float, ...]" = ()
 
     def step_deps(self) -> "list[tuple[int, ...]]":
         """True cross-step data hazards: step *j* depends on step *i*

@@ -197,6 +197,18 @@ class OnlineServingEngine:
     unbounded — every arrived request).  ``evict_to_admit=True`` lets a
     waiting arrival displace the least-progressed *decoding* request
     (state retained, re-admitted later) instead of queueing behind it.
+
+    ``kv_hot_blocks`` (default ``None`` = unlimited KV) turns on the
+    paged KV-cache residency model: a
+    :class:`~repro.serving.kvcache.PagedKVCache` of that many hot
+    blocks is threaded across admission epochs — prefill/decode credit
+    appends KV tokens, decode participation re-pins cold blocks
+    (``ensure_resident``), and the per-request residency / refill bytes
+    feed :class:`~repro.serving.scheduler.PolicyContext` so
+    residency-aware policies can prefer hot requests and the priced
+    plans carry ``kv_refill`` memory nodes.  Evictions and refills emit
+    ``kv_evicted`` / ``kv_refill`` span markers and
+    ``online_kv_*`` counters.
     """
 
     def __init__(self, cfg, *, max_batch: int = 4,
@@ -209,6 +221,9 @@ class OnlineServingEngine:
                  ttft_p99_slo: "Optional[float]" = None,
                  policy_kw: "Optional[dict]" = None,
                  freq_hz: "Optional[float]" = None,
+                 kv_hot_blocks: "Optional[int]" = None,
+                 kv_block_tokens: int = 16, kv_policy: str = "lru",
+                 kv_seed: int = 0, kv_commit_steps: int = 2,
                  metrics=None, **backend_kwargs):
         from repro.core.config import CASE_STUDY
         from repro.serving.engine import ServingEngine
@@ -227,6 +242,15 @@ class OnlineServingEngine:
         self.evict_to_admit = evict_to_admit
         self.ttft_p99_slo = ttft_p99_slo
         self.policy_kw = dict(policy_kw or {})
+        if kv_commit_steps < 1:
+            raise ValueError(f"kv_commit_steps must be >= 1, "
+                             f"got {kv_commit_steps}")
+        self.kv_hot_blocks = kv_hot_blocks
+        self.kv_block_tokens = kv_block_tokens
+        self.kv_policy = kv_policy
+        self.kv_seed = kv_seed
+        self.kv_commit_steps = kv_commit_steps
+        self.kv_cache = None           # built per run() when enabled
         self.backend_kwargs = dict(backend_kwargs)
         unit = backend_kwargs.get("unit")
         self.freq_hz = float(freq_hz if freq_hz is not None else
@@ -257,6 +281,12 @@ class OnlineServingEngine:
     def _context(self, inflight: "list[OnlineRequest]", clock: float):
         from repro.serving.scheduler import PolicyContext
         arr = tuple(max(0.0, r.arrival - clock) for r in inflight)
+        kv_res, kv_ref = (), ()
+        if self.kv_cache is not None:
+            kv_res = tuple(self.kv_cache.residency(r.rid)
+                           for r in inflight)
+            kv_ref = tuple(self.kv_cache.refill_bytes(r.rid)
+                           for r in inflight)
         return PolicyContext(
             cfg=self.cfg,
             prompt_lengths=tuple(r.prompt_len for r in inflight),
@@ -265,7 +295,8 @@ class OnlineServingEngine:
             units=self.units,
             arrival_times=arr if any(arr) else (),
             prefill_progress=tuple(r.prefill_done for r in inflight),
-            decode_done=tuple(r.decode_done for r in inflight))
+            decode_done=tuple(r.decode_done for r in inflight),
+            kv_residency=kv_res, kv_refill_bytes=kv_ref)
 
     # ----- the event loop --------------------------------------------------
     def run(self, source: "Iterable") -> OnlineResult:
@@ -278,6 +309,27 @@ class OnlineServingEngine:
         arrivals = list(source)
         reqs = [OnlineRequest(i, a.time, a.prompt_len)
                 for i, a in enumerate(arrivals)]
+        self.kv_cache = None
+        if self.kv_hot_blocks is not None:
+            from repro.serving.kvcache import (PagedKVCache,
+                                               kv_bytes_per_token)
+            # one request's full stream must fit the hot pool (vLLM's
+            # block-manager admission rule): an oversized request would
+            # deadlock on its own pinned blocks instead of thrashing.
+            need = max((r.prompt_len for r in reqs), default=0) \
+                + self.max_new_tokens
+            need_blocks = -(-need // self.kv_block_tokens)
+            if need_blocks > self.kv_hot_blocks:
+                raise ValueError(
+                    f"kv_hot_blocks={self.kv_hot_blocks} cannot hold one "
+                    f"request's working set ({need} tokens = "
+                    f"{need_blocks} blocks of {self.kv_block_tokens}); "
+                    f"raise kv_hot_blocks or kv_block_tokens")
+            self.kv_cache = PagedKVCache(
+                hot_blocks=self.kv_hot_blocks,
+                block_tokens=self.kv_block_tokens,
+                kv_bytes_per_token=kv_bytes_per_token(self.cfg),
+                policy=self.kv_policy, seed=self.kv_seed)
         asm = SpanAssembler(self.cfg.n_layers)
         for r in reqs:
             asm.observe_arrival(r.rid, r.arrival)
@@ -357,9 +409,15 @@ class OnlineServingEngine:
                                if s < horizon - _EPS))
             else:
                 k = len(sched.steps)
+            if self.kv_cache is not None:
+                # a plan is priced against residency at epoch start;
+                # eviction churn invalidates it, so under a bounded KV
+                # pool re-plan every ``kv_commit_steps`` steps.
+                k = min(k, self.kv_commit_steps)
             csched = dataclasses.replace(
                 sched, steps=sched.steps[:k], layers=sched.layers[:k],
-                release_times=tuple(sched.release_times[:k]))
+                release_times=tuple(sched.release_times[:k]),
+                refill_bytes=tuple(sched.refill_bytes[:k]))
             # --- execute the committed epoch on the grounded path ---------
             res = self.inner.run_schedule(
                 csched, backend_name=self.execute_backend,
@@ -375,7 +433,7 @@ class OnlineServingEngine:
                           id_map={i: r.rid for i, r in
                                   enumerate(inflight)})
             # --- progress + finish bookkeeping ----------------------------
-            self._advance(csched, windows, inflight, clock)
+            self._advance(csched, windows, inflight, clock, asm=asm)
             cut = k < len(sched.steps)
             preempted = []
             if cut:
@@ -388,6 +446,9 @@ class OnlineServingEngine:
             done = [r for r in inflight if r.done(self.max_new_tokens)]
             inflight = [r for r in inflight
                         if not r.done(self.max_new_tokens)]
+            if self.kv_cache is not None:
+                for r in done:
+                    self.kv_cache.release(r.rid, t=clock + epoch_make)
             m.counter("online_epochs_total", policy=pol).inc()
             m.counter("online_preemptions_total", policy=pol).inc(
                 len(preempted))
@@ -409,32 +470,75 @@ class OnlineServingEngine:
                             max_new_tokens=self.max_new_tokens,
                             freq_hz=self.freq_hz)
 
-    def _advance(self, csched, windows, inflight, clock: float) -> None:
+    def _advance(self, csched, windows, inflight, clock: float,
+                 asm=None) -> None:
         """Fold one committed epoch's steps into per-request progress
         (padded-token prefill accounting, capped decode credit) and
-        stamp finish times as requests drain."""
+        stamp finish times as requests drain.  When the paged KV cache
+        is enabled, credited tokens append KV blocks and decode
+        participation re-pins cold blocks, emitting ``kv_evicted`` /
+        ``kv_refill`` markers into ``asm``."""
         n_layers = self.cfg.n_layers
         for step, (start, end) in zip(csched.steps, windows):
             dr = set(step.decode_requests or (
                 step.requests if step.kind == "decode" else ()))
             pre = [i for i in step.requests if i not in dr]
             iters = max(1, round(step.repeat / n_layers))
+            t = clock + end
             if pre:
                 share = step.tokens - (len(dr) if step.kind == "mixed"
                                        else 0)
                 per = max(1, math.ceil(share / len(pre)))
                 for i in pre:
                     r = inflight[i]
-                    r.prefill_done = min(r.prompt_len,
-                                         r.prefill_done + per)
+                    credit = min(r.prompt_len, r.prefill_done + per) \
+                        - r.prefill_done
+                    r.prefill_done += credit
+                    self._kv_append(r.rid, credit, t, asm)
             for i in dr:
                 r = inflight[i]
-                r.decode_done = min(self.max_new_tokens,
-                                    r.decode_done + iters)
+                credit = min(self.max_new_tokens,
+                             r.decode_done + iters) - r.decode_done
+                r.decode_done += credit
+                self._kv_touch(r.rid, t, asm)
+                self._kv_append(r.rid, credit, t, asm)
             for i in step.requests:
                 r = inflight[i]
                 if r.done(self.max_new_tokens):
+                    if r.finish is None and self.kv_cache is not None:
+                        # free the pool at completion, not epoch end —
+                        # a done request must never be an eviction
+                        # victim (its span chain already closed).
+                        self.kv_cache.release(r.rid, t=t)
                     r.finish = clock + end
+
+    # ----- paged-KV bookkeeping -------------------------------------------
+    def _kv_append(self, rid: int, n_tokens: int, t: float, asm) -> None:
+        if self.kv_cache is None or n_tokens <= 0:
+            return
+        self._kv_evicted(self.kv_cache.append(rid, n_tokens, t=t), t, asm)
+
+    def _kv_touch(self, rid: int, t: float, asm) -> None:
+        """Decode needs the whole KV stream hot: re-pin cold blocks,
+        pricing the refill into counters + span markers."""
+        if self.kv_cache is None:
+            return
+        cost, evictions = self.kv_cache.ensure_resident(rid, t=t)
+        if cost > 0.0:
+            self.metrics.counter("online_kv_refills_total",
+                                 policy=self.policy).inc()
+            self.metrics.counter("online_kv_refill_bytes_total",
+                                 policy=self.policy).inc(cost)
+            if asm is not None:
+                asm.mark(rid, "kv_refill", t)
+        self._kv_evicted(evictions, t, asm)
+
+    def _kv_evicted(self, evictions, t: float, asm) -> None:
+        for victim, _slot, _tier in evictions:
+            self.metrics.counter("online_kv_evictions_total",
+                                 policy=self.policy).inc()
+            if asm is not None:
+                asm.mark(victim, "kv_evicted", t)
 
 
 # ---------------------------------------------------------------------------

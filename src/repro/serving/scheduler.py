@@ -89,6 +89,16 @@ class PolicyContext:
     skips prefill and only its owed decode iterations are scheduled.
     Both default empty — all-zero progress, the classic one-shot plan,
     bit-identical to the pre-online behaviour.
+
+    ``kv_residency`` / ``kv_refill_bytes`` thread the paged KV cache's
+    state (:mod:`repro.serving.kvcache`) into the plan: per request, the
+    hot fraction of its KV blocks and the loader bytes owed before it
+    can decode again.  A policy may *prefer* hot requests
+    (``decode-priority`` does); either way :meth:`SchedulingPolicy
+    ._finish` stamps each request's owed refill onto the first step that
+    touches it, so the lowering prices the refill as a real ``memory``
+    node.  Both default empty — KV is free and always resident, the
+    classic behaviour.
     """
 
     cfg: object                       # models.base.ArchConfig
@@ -99,19 +109,40 @@ class PolicyContext:
     arrival_times: "tuple[float, ...]" = ()
     prefill_progress: "tuple[int, ...]" = ()
     decode_done: "tuple[int, ...]" = ()
+    kv_residency: "tuple[float, ...]" = ()
+    kv_refill_bytes: "tuple[float, ...]" = ()
 
     def __post_init__(self):
-        for field in ("arrival_times", "prefill_progress", "decode_done"):
+        for field in ("arrival_times", "prefill_progress", "decode_done",
+                      "kv_residency", "kv_refill_bytes"):
             val = getattr(self, field)
             if val and len(val) != len(self.prompt_lengths):
                 raise ValueError(
                     f"{len(val)} {field} for "
                     f"{len(self.prompt_lengths)} requests")
+        if any(not 0.0 <= r <= 1.0 for r in self.kv_residency):
+            raise ValueError(f"kv_residency outside [0, 1]: "
+                             f"{self.kv_residency}")
+        if any(b < 0.0 for b in self.kv_refill_bytes):
+            raise ValueError(f"negative kv_refill_bytes: "
+                             f"{self.kv_refill_bytes}")
 
     def arrival_of(self, request: int) -> float:
         """Arrival cycle of a request (0.0 when arrivals untracked)."""
         return (self.arrival_times[request]
                 if request < len(self.arrival_times) else 0.0)
+
+    def residency_of(self, request: int) -> float:
+        """Hot-KV fraction of a request (1.0 when residency untracked —
+        the classic everything-is-resident assumption)."""
+        return (self.kv_residency[request]
+                if request < len(self.kv_residency) else 1.0)
+
+    def refill_of(self, request: int) -> float:
+        """KV refill bytes a request owes before decoding (0.0 when
+        residency untracked)."""
+        return (self.kv_refill_bytes[request]
+                if request < len(self.kv_refill_bytes) else 0.0)
 
     def remaining_prompt(self, request: int) -> int:
         """Prompt tokens of ``request`` still to prefill."""
@@ -226,11 +257,25 @@ class SchedulingPolicy(abc.ABC):
             release = tuple(
                 max((ctx.arrival_of(r) for r in s.requests), default=0.0)
                 for s in steps)
+        refill = ()
+        if any(ctx.kv_refill_bytes):
+            # a request's owed KV refill is paid once, on the first step
+            # that touches it — after that its blocks are hot for the
+            # rest of the plan.  The lowering turns nonzero step refill
+            # into a real ``memory`` node the DES/analytical forms price.
+            owed = {r: ctx.refill_of(r)
+                    for r in range(len(ctx.prompt_lengths))
+                    if ctx.refill_of(r) > 0.0}
+            per_step = []
+            for s in steps:
+                per_step.append(sum(owed.pop(r, 0.0) for r in s.requests))
+            refill = tuple(per_step)
         return BatchSchedule(steps, layers, units=ctx.units,
                              policy=self.name,
                              affinity=dict(affinity or {}),
                              arrival_times=tuple(ctx.arrival_times),
-                             release_times=release)
+                             release_times=release,
+                             refill_bytes=refill)
 
     def _carryover_inflight(self, ctx: PolicyContext) -> "list[_InFlight]":
         """Online carryover as in-flight decode entries: requests whose
@@ -243,6 +288,26 @@ class SchedulingPolicy(abc.ABC):
         return [_InFlight(ci=-1, ids=tuple(ids), left=owed,
                           label=f"carry{owed}")
                 for owed, ids in sorted(by_owed.items())]
+
+    def _split_by_residency(self, ctx, inflight):
+        """Partition in-flight decode entries into (hot, cold) by the
+        context's KV residency: a request owing refill bytes is cold.
+        Entries mixing both split into two, name-tagged ``.hot`` /
+        ``.cold`` so the step labels stay unique."""
+        hot, cold = [], []
+        for d in inflight:
+            h = tuple(i for i in d.ids if ctx.refill_of(i) <= 0.0)
+            c = tuple(i for i in d.ids if ctx.refill_of(i) > 0.0)
+            if h and not c:
+                hot.append(d)
+            elif c and not h:
+                cold.append(d)
+            else:
+                if h:
+                    hot.append(_InFlight(d.ci, h, d.left, d.tag + ".hot"))
+                if c:
+                    cold.append(_InFlight(d.ci, c, d.left, d.tag + ".cold"))
+        return hot, cold
 
     def _drain_round_robin(self, steps, layers, ctx, inflight):
         """Fair round-robin drain of everything still owing decode
@@ -362,15 +427,41 @@ class DecodePriorityPolicy(_ChunkingPolicy):
     stream onto unit 0 for the ``unit-affinity`` partition strategy
     (list the fastest unit first in a heterogeneous topology); prefill
     GEMMs stay unhinted so the partitioner balances them over every
-    unit."""
+    unit.
+
+    With KV residency threaded through the context
+    (``ctx.kv_residency`` — see :mod:`repro.serving.kvcache`) and
+    ``residency_aware`` on (the default), the carried-over decode
+    streams are served **hot-first**: requests whose KV blocks are all
+    resident drain before any cold stream's refill is waited out, so
+    hot first-token latencies stop paying for other requests' evicted
+    blocks.  The cold streams still pay their refill (stamped onto
+    their first step and priced as a memory node) — the policy moves
+    the refill out of the hot requests' critical path, it never hides
+    it.  ``residency_aware=False`` is the residency-blind twin: same
+    physics, one merged drain that makes everyone wait out the refill.
+    """
 
     name = "decode-priority"
+
+    def __init__(self, chunk_tokens: int = 256,
+                 residency_aware: bool = True):
+        super().__init__(chunk_tokens)
+        self.residency_aware = residency_aware
 
     def schedule(self, ctx: PolicyContext):
         steps, layers = [], []
         affinity: "dict[str, int]" = {}
         # online carryover preempts the very first prefill chunk
         inflight: "list[_InFlight]" = self._carryover_inflight(ctx)
+        if self.residency_aware and any(ctx.kv_refill_bytes):
+            hot, cold = self._split_by_residency(ctx, inflight)
+            if hot and cold:
+                # hot streams drain to completion first; cold streams
+                # re-enter the normal preemption flow behind them and
+                # pay their refill there.
+                self._drain_round_robin(steps, layers, ctx, hot)
+                inflight = cold
         rr = 0
 
         def emit_decode(name, rid, repeat):
@@ -438,7 +529,7 @@ _PRICE_CACHE_MAX = 4096
 
 
 def _layer_price_key(lt, sched, backend_name: str, kw: dict,
-                     release: float = 0.0) -> tuple:
+                     release: float = 0.0, refill: float = 0.0) -> tuple:
     """Cache key of one step's price: everything its cost can depend on.
     ``LayerTrace``/``MatMulTask`` are dataclasses with content reprs;
     the step *name* only matters when the partition affinity hints it
@@ -451,10 +542,13 @@ def _layer_price_key(lt, sched, backend_name: str, kw: dict,
     shapes* under shifted arrivals every admission epoch, and a backend
     that starts charging release gaps or cross-step contention into
     step costs must never alias a stale entry (pinned by
-    ``tests/test_online.py``)."""
+    ``tests/test_online.py``).  ``refill`` — the step's owed KV refill
+    bytes — is part of the key for the same reason: a step's price
+    includes its refill memory traffic, so the same shape under
+    different residency must never alias."""
     hinted = lt.name if lt.name in (sched.affinity or {}) else None
     return (backend_name, repr(sorted(kw.items())), hinted,
-            sched.overlap, release,
+            sched.overlap, release, refill,
             tuple(repr(g) for g in lt.gemms),
             tuple(sorted(lt.vector_ops.items())),
             lt.intermediate_bytes, lt.repeat)
@@ -478,8 +572,10 @@ def _price_workloads(sched, backend_name: str,
     reg = default_registry()
     out: "list[dict]" = []
     rel = list(sched.release_times) or [0.0] * len(sched.layers)
-    for lt, release in zip(sched.layers, rel):
-        key = _layer_price_key(lt, sched, backend_name, kw, release)
+    refills = list(getattr(sched, "refill_bytes", ()) or ())
+    refills += [0.0] * (len(sched.layers) - len(refills))
+    for lt, release, refill in zip(sched.layers, rel, refills):
+        key = _layer_price_key(lt, sched, backend_name, kw, release, refill)
         w = _PRICE_CACHE.get(key)
         if w is None:
             reg.counter("price_cache_misses_total",
@@ -490,6 +586,17 @@ def _price_workloads(sched, backend_name: str,
                     raise ValueError(f"backend {backend_name!r} does not "
                                      "model time")
             w = eng.run_workload([lt])
+            if refill > 0.0:
+                # the step's KV refill rides the shared loader before
+                # its tiles — the same memory-node price the lowered
+                # graph carries, added serially here so per-step
+                # pricing and the full-graph DES/analytical forms see
+                # the same cost.
+                from repro.serving.kvcache import refill_cycles
+                extra = refill_cycles(refill, eng.unit, eng.platform,
+                                      units=sched.units)
+                w = dict(w, cycles=w["cycles"] + extra,
+                         kv_refill_cycles=extra)
             if len(_PRICE_CACHE) >= _PRICE_CACHE_MAX:
                 _PRICE_CACHE.clear()
             _PRICE_CACHE[key] = w

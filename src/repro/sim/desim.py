@@ -98,7 +98,8 @@ def build_machine(unit: MatrixUnitConfig, platform: CpuPlatform,
 # ---------------------------------------------------------------------------
 
 def tile_work(unit: MatrixUnitConfig, platform: CpuPlatform, node: Node,
-              out_bytes: float = 4.0) -> "dict[str, float]":
+              out_bytes: float = 4.0,
+              streams: int = 1) -> "dict[str, float]":
     """Per-tile compute cycles and *effective* load/writeback bytes.
 
     Effective bytes are actual bytes divided by the stride-dependent DRAM
@@ -107,6 +108,12 @@ def tile_work(unit: MatrixUnitConfig, platform: CpuPlatform, node: Node,
     derate, a narrow tile cut from a wide row-major matrix pays per-row
     address jumps.  Dividing by a loader's raw bytes/cycle turns them
     into cycles, which is how the shared cluster loader charges them.
+
+    ``streams`` is the row-buffer interleaving factor
+    (``ClusterTopology.interleaved_streams``): tiles riding a shared
+    pool alongside ``streams - 1`` other units see their contiguous runs
+    chopped accordingly; 1 (default, and any private slice) keeps the
+    single-stream curve.
     """
     task = node.task
     base = platform.dram_efficiency
@@ -120,11 +127,14 @@ def tile_work(unit: MatrixUnitConfig, platform: CpuPlatform, node: Node,
     bias_bytes = {BiasType.ZERO: 0.0, BiasType.ROW: task.n * 4.0,
                   BiasType.FULL: task.m * task.n * 4.0}[task.bias_type]
     eff_a = dram_stride_efficiency(
-        contiguous_run_bytes(task.m, task.k, task.stride_a, eb), base)
+        contiguous_run_bytes(task.m, task.k, task.stride_a, eb), base,
+        streams)
     eff_b = dram_stride_efficiency(
-        contiguous_run_bytes(task.k, task.n, task.stride_b, eb), base)
+        contiguous_run_bytes(task.k, task.n, task.stride_b, eb), base,
+        streams)
     eff_c = dram_stride_efficiency(
-        contiguous_run_bytes(task.m, task.n, task.stride_c, out_bytes), base)
+        contiguous_run_bytes(task.m, task.n, task.stride_c, out_bytes),
+        base, streams)
     load_eff = (task.m * task.k * eb / eff_a
                 + task.k * task.n * eb / eff_b
                 + bias_bytes / base)
@@ -145,15 +155,18 @@ def tile_costs(machine: Machine, node: Node,
 
 
 def tile_chunks(unit: MatrixUnitConfig, platform: CpuPlatform, node: Node,
-                out_bytes: float = 4.0) -> "list[tuple[float, float]]":
+                out_bytes: float = 4.0,
+                streams: int = 1) -> "list[tuple[float, float]]":
     """K-chunked (load_eff_bytes, compute_cycles) stream for one tile.
 
     The scratchpad stages ``k_scp_bytes`` of the K extent at a time; the
     PE may reduce chunk *j* as soon as chunk *j* is resident, so a
     tile's fill overlaps its own compute.  Bias rides the first chunk.
+    ``streams`` is the row-buffer interleaving factor (see
+    :func:`tile_work`).
     """
     task = node.task
-    w = tile_work(unit, platform, node, out_bytes)
+    w = tile_work(unit, platform, node, out_bytes, streams)
     dt = task.data_type
     eb = policy(dt).bytes_per_elem
     ck = max(1, int(unit.k_scp_bytes / eb))
@@ -462,11 +475,13 @@ def _run_matmul(machine: ClusterMachine, mu: UnitMachine, node: Node,
     # contended pool (cross-unit transfers still share — see `start`).
     if mu.private_loader is not None:
         loader, bpc = mu.private_loader, mu.private_bpc
+        streams = 1                    # a private slice never interleaves
     else:
         loader, bpc = machine.loader, machine.loader_bpc
-    w = tile_work(unit, platform, node)
+        streams = topo.interleaved_streams()
+    w = tile_work(unit, platform, node, streams=streams)
     if topo.k_stream:
-        chunks = tile_chunks(unit, platform, node)
+        chunks = tile_chunks(unit, platform, node, streams=streams)
     else:
         chunks = [(w["load_eff"], w["compute"])]
     n_chunks = len(chunks)

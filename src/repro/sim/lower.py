@@ -107,6 +107,7 @@ def workload_to_graph(unit: MatrixUnitConfig, layers: "list[LayerTrace]", *,
                       overlap: str = "chained",
                       step_deps: "list[tuple[int, ...]] | None" = None,
                       release_times: "list[float] | None" = None,
+                      refill_bytes: "list[float] | None" = None,
                       ) -> TaskGraph:
     """Lower a list of ``LayerTrace`` steps into one TaskGraph.
 
@@ -145,6 +146,14 @@ def workload_to_graph(unit: MatrixUnitConfig, layers: "list[LayerTrace]", *,
         :attr:`~repro.sim.graph.Node.release_time`, honoured by the DES
         and approximated by the analytical backend.  ``None`` means
         everything is available at t = 0.
+    :param refill_bytes: per-step KV-cache refill bytes (paged-KV
+        residency — see :mod:`repro.serving.kvcache`): a step owing a
+        nonzero refill gets a ``memory`` node ``<name>/kv_refill``
+        *ahead of its tiles*, riding the shared/private
+        ``BandwidthResource`` loaders exactly like a spill round-trip,
+        so the DES and the analytical form both price the refill while
+        JAX execution (memory nodes are simulation-only) is unchanged.
+        ``None`` means KV is free and always resident.
     """
     if overlap not in OVERLAP_MODES:
         raise ValueError(f"unknown overlap mode {overlap!r}; one of "
@@ -160,6 +169,9 @@ def workload_to_graph(unit: MatrixUnitConfig, layers: "list[LayerTrace]", *,
     if release_times is not None and len(release_times) != len(layers):
         raise ValueError(f"{len(release_times)} release_times for "
                          f"{len(layers)} steps")
+    if refill_bytes is not None and len(refill_bytes) != len(layers):
+        raise ValueError(f"{len(refill_bytes)} refill_bytes for "
+                         f"{len(layers)} steps")
     graph = TaskGraph()
     step_sinks: "list[list[int]]" = []
     deps: "list[int]" = []
@@ -173,6 +185,13 @@ def workload_to_graph(unit: MatrixUnitConfig, layers: "list[LayerTrace]", *,
                         "earlier steps")
                 deps.extend(step_sinks[d])
         first_nid = len(graph)
+        if refill_bytes is not None and refill_bytes[i] > 0.0:
+            # evicted-block refill: the step's KV streams back through
+            # the memory loader before its first tile may start.
+            mem = graph.add("memory", f"{layer.name}/kv_refill",
+                            deps=tuple(deps), layer=layer.name,
+                            mem_bytes=float(refill_bytes[i]))
+            deps = [mem.nid]
         for _ in range(layer.repeat if expand_repeat else 1):
             graph, sinks = layer_to_graph(
                 unit, layer, fused=fused, granularity=granularity,
@@ -203,6 +222,8 @@ def schedule_to_graph(unit: MatrixUnitConfig, sched, *,
         platform=platform, overlap=overlap,
         step_deps=(sched.step_deps() if overlap == "relaxed" else None),
         release_times=list(getattr(sched, "release_times", ()) or ())
+        or None,
+        refill_bytes=list(getattr(sched, "refill_bytes", ()) or ())
         or None)
 
 

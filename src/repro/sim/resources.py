@@ -61,7 +61,8 @@ def contiguous_run_bytes(rows: int, row_elems: int, stride_elems: int,
     return row_elems * elem_bytes
 
 
-def dram_stride_efficiency(run_bytes: float, base_efficiency: float) -> float:
+def dram_stride_efficiency(run_bytes: float, base_efficiency: float,
+                           streams: int = 1) -> float:
     """Achieved/nominal DRAM bandwidth streaming contiguous runs of
     ``run_bytes`` between address jumps.
 
@@ -70,10 +71,18 @@ def dram_stride_efficiency(run_bytes: float, base_efficiency: float) -> float:
     saturate there — dense streams are what the flat derate was
     calibrated on), while sub-burst runs degrade toward
     ``base * run / (run + gap) / 0.8``.
+
+    ``streams`` carries the shared loader's **row-buffer state across
+    interleaved streams** (``ClusterTopology.row_buffer``): N units
+    drawing on one pool take turns on the memory channel, so each
+    stream's bursts are chopped by the others' row activations and the
+    contiguous run it actually sustains is ``run_bytes / N`` — one
+    stream (the default) reproduces the single-unit curve exactly.
     """
     if run_bytes <= 0:
         return base_efficiency
-    raw = run_bytes / (run_bytes + DRAM_JUMP_GAP_BYTES)
+    eff_run = run_bytes / max(1, streams)
+    raw = eff_run / (eff_run + DRAM_JUMP_GAP_BYTES)
     ref = DRAM_REFERENCE_RUN_BYTES / (DRAM_REFERENCE_RUN_BYTES
                                       + DRAM_JUMP_GAP_BYTES)
     return base_efficiency * min(1.0, raw / ref)
@@ -346,6 +355,11 @@ class ClusterTopology:
     loader_policy: str = "fair"       # "fair" | "fcfs"
     total_bandwidth: Optional[float] = None
     k_stream: bool = True
+    #: model the shared loader's row-buffer state across the units'
+    #: interleaved operand streams: each shared-pool stream's contiguous
+    #: runs are chopped by the others (``dram_stride_efficiency``'s
+    #: ``streams`` knob).  Off by default — the flat calibrated derate.
+    row_buffer: bool = False
     unit_specs: "Optional[tuple]" = None   # heterogeneous per-unit specs
 
     def __post_init__(self):
@@ -425,6 +439,16 @@ class ClusterTopology:
     def shared_bandwidth(self) -> float:
         """Pool left for contended traffic after private slices."""
         return self.loader_bandwidth - self.private_total
+
+    def interleaved_streams(self) -> int:
+        """Streams whose interleaving degrades the shared pool's
+        row-buffer locality: the units *without* a private slice when
+        ``row_buffer`` modelling is on, else 1 (each transfer sees the
+        calibrated single-stream curve)."""
+        if not self.row_buffer:
+            return 1
+        return max(1, sum(1 for i in range(self.n_units)
+                          if self.private_bandwidth(i) <= 0))
 
     def with_(self, **kw) -> "ClusterTopology":
         return dataclasses.replace(self, **kw)

@@ -104,13 +104,19 @@ def schedule_bucket(sched) -> str:
     """Cache key of a serving ``BatchSchedule``: cluster width plus
     whether the drain is decode- or prefill-dominated by repeat-weighted
     step count (decode steps repeat ``n_layers × iterations``, so a
-    modest ``max_new_tokens`` already tips a queue decode-heavy)."""
+    modest ``max_new_tokens`` already tips a queue decode-heavy).
+
+    Schedules carrying KV refill traffic (``refill_bytes`` stamped by a
+    residency-aware plan) get a ``|kv`` suffix: a loader already paying
+    refill bytes favours different tile/overlap trade-offs than the
+    all-resident regime, so tuned entries must not leak across."""
     decode = sum(s.repeat for s in sched.steps
                  if s.kind == "decode" or s.decode_requests)
     prefill = sum(s.repeat for s in sched.steps
                   if not (s.kind == "decode" or s.decode_requests))
     regime = "decode" if decode >= prefill else "prefill"
-    return f"sched|u{sched.units}|{regime}"
+    kv = "|kv" if any(getattr(sched, "refill_bytes", ()) or ()) else ""
+    return f"sched|u{sched.units}|{regime}{kv}"
 
 
 def _tile_choices(unit) -> "list[tuple[Optional[int], Optional[int]]]":

@@ -1,0 +1,114 @@
+"""Bench-harness contracts: the fail-loudly units guard and the tracked
+KV-pressure rows.
+
+The guard (``benchmarks.run.require_units_support``) exists because a
+``u2``-labelled row priced by a single-unit backend silently records a
+wrong baseline that every later CI run is then gated against — the
+harness must refuse the row, not degrade it.  The ``kv|*`` rows pin the
+tentpole's two headline effects as tracked metrics.
+"""
+
+import sys
+
+import pytest
+
+sys.path.insert(0, ".")  # repo root: benchmarks/ is a top-level package
+
+from benchmarks.record import record_kv, record_serving          # noqa: E402
+from benchmarks.run import require_units_support                 # noqa: E402
+
+
+class TestRequireUnitsSupport:
+    def test_cluster_backends_pass(self):
+        require_units_support("analytical", 2)
+        require_units_support("desim-cluster", 4)
+
+    def test_single_unit_at_one_passes(self):
+        require_units_support("desim", 1)
+
+    def test_single_unit_multi_raises(self):
+        with pytest.raises(ValueError, match="desim.*single matrix unit"):
+            require_units_support("desim", 2)
+
+    def test_error_names_the_requested_width(self):
+        with pytest.raises(ValueError, match="units=4"):
+            require_units_support("desim", 4)
+
+    def test_workload_sim_refuses_silent_downgrade(self, monkeypatch):
+        """The regression: ``workload_sim`` used to fall through to a
+        units=1 engine when --units targeted a single-unit backend."""
+        import benchmarks.run as run
+        monkeypatch.setattr(run, "ENGINE", "desim")
+        monkeypatch.setattr(run, "UNITS", 2)
+        with pytest.raises(ValueError, match="single matrix unit"):
+            run.workload_sim()
+
+    def test_record_serving_refuses_single_unit_backend(self):
+        """The u2 rows of the quick subset must abort the recording
+        rather than silently pricing units=1 into the baseline."""
+        with pytest.raises(ValueError, match="single matrix unit"):
+            record_serving(quick=True, backend_name="desim")
+
+
+@pytest.fixture(scope="module")
+def kv_rows():
+    return record_kv(quick=True)
+
+
+class TestKVBenchRows:
+    def test_row_keys(self, kv_rows):
+        assert set(kv_rows) == {"kv|unlimited", "kv|pressured",
+                                "kv|residency"}
+        for entry in kv_rows.values():
+            assert set(entry) == {"metrics", "info"}
+
+    def test_pressure_visible(self, kv_rows):
+        """The small pool's DES makespan visibly exceeds unlimited."""
+        m = kv_rows["kv|pressured"]["metrics"]
+        assert m["pressure_ratio"] > 1.01
+        assert m["makespan"] > kv_rows["kv|unlimited"]["metrics"]["makespan"]
+        assert m["evictions"] > 0
+        assert m["refill_bytes"] > 0
+
+    def test_residency_speedup(self, kv_rows):
+        """Residency-aware decode-priority beats blind on decode p50;
+        the metric name carries 'speedup' so check_bench treats a drop
+        as a regression."""
+        from scripts.check_bench import higher_is_better
+        m = kv_rows["kv|residency"]["metrics"]
+        assert m["residency_speedup"] > 1.05
+        assert higher_is_better("residency_speedup")
+        assert not higher_is_better("pressure_ratio")
+
+    def test_deterministic(self, kv_rows):
+        again = record_kv(quick=True)
+        a = {k: v["metrics"] for k, v in kv_rows.items()}
+        b = {k: v["metrics"] for k, v in again.items()}
+        assert a == b
+        assert (again["kv|pressured"]["info"]["trace_digest"]
+                == kv_rows["kv|pressured"]["info"]["trace_digest"])
+
+    def test_check_bench_gates_kv_regression(self, kv_rows, tmp_path):
+        """A worsened kv row against the recorded baseline fails the
+        gate; the identical snapshot passes."""
+        import copy
+        import json
+        from scripts.check_bench import main as check_main
+
+        doc = {"schema_version": 1, "bench": "serving", "entries": kv_rows}
+        base = tmp_path / "base"
+        fresh = tmp_path / "fresh"
+        for d in (base, fresh):
+            d.mkdir()
+        (base / "BENCH_serving.json").write_text(json.dumps(doc))
+        (fresh / "BENCH_serving.json").write_text(json.dumps(doc))
+        assert check_main(["--baseline-dir", str(base),
+                           "--fresh-dir", str(fresh)]) == 0
+
+        worse = copy.deepcopy(doc)
+        worse["entries"]["kv|pressured"]["metrics"]["makespan"] *= 1.5
+        worse["entries"]["kv|residency"]["metrics"][
+            "residency_speedup"] *= 0.5
+        (fresh / "BENCH_serving.json").write_text(json.dumps(worse))
+        assert check_main(["--baseline-dir", str(base),
+                           "--fresh-dir", str(fresh)]) == 1

@@ -518,3 +518,92 @@ class TestServingOnCluster:
         for label in ops:
             assert (np.asarray(rs.outputs[label])
                     == np.asarray(rj.outputs[label])).all(), label
+
+
+# ---------------------------------------------------------------------------
+# Shared DRAM row-buffer state across units' interleaved streams.
+# ---------------------------------------------------------------------------
+
+class TestRowBufferInterleaving:
+    """``ClusterTopology.row_buffer``: N shared-pool streams chop each
+    other's contiguous runs (``dram_stride_efficiency``'s ``streams``
+    knob).  Opt-in — the default is bit-identical to the calibrated flat
+    derate — and the DES and the analytical closed form stay within 5%
+    of each other with it enabled."""
+
+    # narrow tiles cut from a wide row-major matrix on a small fixed
+    # pool: short runs + loader-bound, where interleaving actually bites.
+    TASK = MatMulTask(m=512, n=128, k=2048, stride_b=8192, stride_c=8192)
+
+    def _pair(self, n, row_buffer):
+        from repro.core.hardware import GIGA
+        unit = PLATFORM_2TOPS
+        g, _ = build_gemm_graph(self.TASK, unit.m_scp, unit.n_scp)
+        part = partition_graph(g, n, "row-panel")
+        topo = ClusterTopology(n_units=n, unit=unit, platform=SHUTTLE,
+                               total_bandwidth=16 * GIGA,
+                               row_buffer=row_buffer)
+        des = simulate_cluster(part.graph, topo)
+        ana = backend.get("analytical", topology=topo).run_graph(part)
+        return des, ana
+
+    def test_streams_chop_runs(self):
+        from repro.sim.resources import dram_stride_efficiency
+        base = SHUTTLE.dram_efficiency
+        # default reproduces the single-stream curve exactly
+        assert dram_stride_efficiency(256.0, base, streams=1) == \
+            pytest.approx(dram_stride_efficiency(256.0, base))
+        # more interleaved streams -> shorter effective runs; long runs
+        # only degrade once chopped below the 64-byte reference burst
+        assert dram_stride_efficiency(256.0, base, 4) == \
+            pytest.approx(base)                       # 64 B each: still ok
+        e1 = dram_stride_efficiency(96.0, base)
+        e2 = dram_stride_efficiency(96.0, base, 2)
+        e4 = dram_stride_efficiency(96.0, base, 4)
+        assert e4 < e2 < e1 == pytest.approx(base)
+        # N streams of run R behave like one stream of run R/N
+        assert dram_stride_efficiency(128.0, base, 2) == \
+            pytest.approx(dram_stride_efficiency(64.0, base))
+
+    def test_topology_stream_count(self):
+        from repro.core.hardware import GIGA
+        from repro.sim import UnitSpec
+        topo = ClusterTopology(n_units=4, unit=PLATFORM_2TOPS)
+        assert topo.interleaved_streams() == 1       # off by default
+        assert topo.with_(row_buffer=True).interleaved_streams() == 4
+        # private slices never interleave on the shared pool
+        het = ClusterTopology(
+            unit_specs=(UnitSpec(unit=PLATFORM_2TOPS,
+                                 private_bandwidth=24 * GIGA),
+                        UnitSpec(unit=PLATFORM_2TOPS),
+                        UnitSpec(unit=PLATFORM_2TOPS)),
+            total_bandwidth=96 * GIGA, row_buffer=True)
+        assert het.interleaved_streams() == 2
+
+    def test_default_off_is_bit_identical(self):
+        """row_buffer=False (the default) must not move a single cycle —
+        the existing calibration pins stay valid."""
+        unit = PLATFORM_2TOPS
+        g, _ = build_gemm_graph(self.TASK, unit.m_scp, unit.n_scp)
+        part = partition_graph(g, 2, "row-panel")
+        base = ClusterTopology(n_units=2, unit=unit, platform=SHUTTLE)
+        expl = base.with_(row_buffer=False)
+        assert simulate_cluster(part.graph, base).cycles == \
+            simulate_cluster(part.graph, expl).cycles
+        # ... and a single unit never interleaves with itself
+        solo = ClusterTopology(n_units=1, unit=unit, platform=SHUTTLE)
+        assert simulate_cluster(g, solo.with_(row_buffer=True)).cycles \
+            == simulate_cluster(g, solo).cycles
+
+    @pytest.mark.parametrize("n", [2, 4])
+    def test_interleaving_costs_visible_makespan(self, n):
+        des_off, _ = self._pair(n, row_buffer=False)
+        des_on, _ = self._pair(n, row_buffer=True)
+        # more streams -> worse locality -> monotonically costlier
+        floor = {2: 1.05, 4: 1.2}[n]
+        assert des_on.cycles > floor * des_off.cycles
+
+    @pytest.mark.parametrize("n", [2, 4])
+    def test_des_vs_analytical_within_5pct(self, n):
+        des, ana = self._pair(n, row_buffer=True)
+        assert abs(ana.cycles / des.cycles - 1.0) <= 0.05

@@ -1,0 +1,336 @@
+"""KV-cache residency as a simulated resource, end to end.
+
+The tentpole's integration bar, in four layers:
+
+* **context** — ``PolicyContext`` carries per-request residency /
+  refill bytes and validates them;
+* **stamping + pricing** — ``_finish`` stamps each request's owed
+  refill onto the first step that touches it, and both modelling
+  backends (analytical closed form and the DES) price the lowered
+  ``kv_refill`` memory node as a visible cost;
+* **bit-exactness** — refill nodes are simulation-only: JAX execution
+  of the same graph is byte-identical with and without them, across
+  tile/panel/layer granularities;
+* **closed loop** — under a hot pool smaller than the aggregate
+  working set the online DES makespan visibly exceeds the unlimited-KV
+  baseline, the residency-aware ``decode-priority`` beats its
+  residency-blind twin on decode p50 (ITL), eviction churn emits
+  ``kv_evicted``/``kv_refill`` span markers with ``validate()`` clean,
+  and the whole run is deterministic given (seed, arrival order).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro import backend
+from repro.configs.registry import get_config
+from repro.core.config import CASE_STUDY
+from repro.serving import scheduler
+from repro.serving.arrivals import DeterministicArrivals
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import refill_cycles
+from repro.serving.online import OnlineServingEngine
+from repro.serving.scheduler import PolicyContext, price_steps
+from repro.sim import Granularity, simulate_graph, workload_to_graph
+from repro.sim.lower import execute_workload_jax, schedule_to_graph
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("yi-6b", reduced=True)
+
+
+def _ctx(cfg, refill=(0.0, 4096.0), residency=(1.0, 0.5), **kw):
+    """Two carryover decode streams, request 1 half-cold."""
+    base = dict(cfg=cfg, prompt_lengths=(8, 8), max_batch=2,
+                max_new_tokens=4, prefill_progress=(8, 8),
+                decode_done=(1, 1), kv_residency=residency,
+                kv_refill_bytes=refill)
+    base.update(kw)
+    return PolicyContext(**base)
+
+
+# ----- context ---------------------------------------------------------------
+
+class TestPolicyContextKV:
+    def test_accessors(self, cfg):
+        ctx = _ctx(cfg)
+        assert ctx.residency_of(0) == 1.0
+        assert ctx.residency_of(1) == 0.5
+        assert ctx.refill_of(1) == 4096.0
+        # untracked requests fall back to the classic assumption
+        assert ctx.residency_of(99) == 1.0
+        assert ctx.refill_of(99) == 0.0
+
+    def test_defaults_empty(self, cfg):
+        ctx = PolicyContext(cfg=cfg, prompt_lengths=(8,), max_batch=2,
+                            max_new_tokens=4)
+        assert ctx.kv_residency == () and ctx.kv_refill_bytes == ()
+        assert ctx.residency_of(0) == 1.0 and ctx.refill_of(0) == 0.0
+
+    def test_length_validated(self, cfg):
+        with pytest.raises(ValueError, match="kv_residency"):
+            _ctx(cfg, residency=(1.0,))
+        with pytest.raises(ValueError, match="kv_refill_bytes"):
+            _ctx(cfg, refill=(0.0,))
+
+    def test_range_validated(self, cfg):
+        with pytest.raises(ValueError, match="outside"):
+            _ctx(cfg, residency=(1.0, 1.5))
+        with pytest.raises(ValueError, match="negative"):
+            _ctx(cfg, refill=(0.0, -1.0))
+
+
+# ----- stamping + pricing ----------------------------------------------------
+
+class TestRefillStamping:
+    @pytest.mark.parametrize("policy,kw", [
+        ("full-prefill", {}),
+        ("chunked-prefill", {"chunk_tokens": 6}),
+        ("decode-priority", {}),
+        ("decode-priority", {"residency_aware": False}),
+    ])
+    def test_refill_charged_exactly_once(self, cfg, policy, kw):
+        sched = scheduler.get_policy(policy, **kw).schedule(_ctx(cfg))
+        assert len(sched.refill_bytes) == len(sched.layers)
+        assert sum(sched.refill_bytes) == pytest.approx(4096.0)
+        # ... and on the first step that touches request 1
+        first = next(i for i, s in enumerate(sched.steps)
+                     if 1 in s.requests)
+        assert sched.refill_bytes[first] == pytest.approx(4096.0)
+
+    def test_no_refill_no_stamp(self, cfg):
+        sched = scheduler.get_policy("decode-priority").schedule(
+            _ctx(cfg, refill=(0.0, 0.0), residency=(1.0, 1.0)))
+        assert not any(sched.refill_bytes)
+
+    def test_residency_aware_drains_hot_first(self, cfg):
+        """The hot stream's decode steps all precede the cold one's."""
+        sched = scheduler.get_policy("decode-priority").schedule(_ctx(cfg))
+        owner = [s.requests for s in sched.steps]
+        last_hot_only = max(i for i, r in enumerate(owner) if r == (0,))
+        first_cold = min(i for i, r in enumerate(owner) if 1 in r)
+        assert last_hot_only < first_cold
+
+    def test_blind_twin_interleaves(self, cfg):
+        """residency_aware=False reproduces the classic merged drain."""
+        blind = scheduler.get_policy(
+            "decode-priority", residency_aware=False).schedule(_ctx(cfg))
+        classic = scheduler.get_policy("decode-priority").schedule(
+            _ctx(cfg, refill=(0.0, 0.0), residency=(1.0, 1.0)))
+        assert [s.requests for s in blind.steps] == \
+            [s.requests for s in classic.steps]
+
+    @pytest.mark.parametrize("backend_name", ["analytical", "desim"])
+    def test_price_steps_includes_refill(self, cfg, backend_name):
+        sched = scheduler.get_policy("decode-priority").schedule(_ctx(cfg))
+        bare = dataclasses.replace(sched, refill_bytes=())
+        with_kv = sum(price_steps(sched, backend_name))
+        without = sum(price_steps(bare, backend_name))
+        assert with_kv > without
+        eng = backend.get(backend_name)
+        extra = refill_cycles(4096.0, eng.unit, eng.platform)
+        assert with_kv - without == pytest.approx(extra, rel=1e-6)
+
+
+class TestRefillLowering:
+    def _sched(self, cfg):
+        sched = scheduler.get_policy("decode-priority").schedule(_ctx(cfg))
+        assert any(sched.refill_bytes)
+        return sched
+
+    def test_graph_grows_memory_nodes(self, cfg):
+        sched = self._sched(cfg)
+        g = schedule_to_graph(CASE_STUDY, sched)
+        kv = [n for n in g.nodes if n.name.endswith("/kv_refill")]
+        assert len(kv) == sum(1 for b in sched.refill_bytes if b > 0.0)
+        for n in kv:
+            assert n.kind == "memory"
+            assert n.mem_bytes > 0.0
+        # the step's tiles wait on the refill: some node depends on it
+        nids = {n.nid for n in kv}
+        assert any(set(n.deps) & nids for n in g.nodes)
+
+    def test_length_mismatch_rejected(self, cfg):
+        sched = self._sched(cfg)
+        with pytest.raises(ValueError, match="refill_bytes"):
+            workload_to_graph(CASE_STUDY, sched.layers,
+                              refill_bytes=[1.0])
+
+    @pytest.mark.parametrize("backend_name", ["analytical", "desim"])
+    def test_both_backends_price_the_node(self, cfg, backend_name):
+        """The lowered graph itself (not just price_steps) carries the
+        cost, on the DES and the analytical closed form alike."""
+        sched = self._sched(cfg)
+        bare = dataclasses.replace(sched, refill_bytes=())
+        eng = backend.get(backend_name)
+        with_kv = eng.run_graph(schedule_to_graph(CASE_STUDY, sched))
+        without = eng.run_graph(schedule_to_graph(CASE_STUDY, bare))
+        assert with_kv.cycles > without.cycles
+
+
+# ----- bit-exactness across granularities ------------------------------------
+
+class TestRefillBitExactness:
+    """Refill nodes shape *time*, never *numbers*: JAX execution of the
+    same schedule is byte-identical with and without them, at every
+    lowering granularity, while the DES sees a strictly larger
+    makespan."""
+
+    @pytest.fixture(scope="class")
+    def planned(self, cfg):
+        eng = ServingEngine(cfg, params=None, max_batch=2, cache_len=64)
+        key = jax.random.PRNGKey(0)
+        for i in range(3):
+            key, sub = jax.random.split(key)
+            eng.submit(jax.random.randint(sub, (4 + i,), 0, 100))
+        sched = eng.plan(max_new_tokens=2, policy="decode-priority")
+        refill = [0.0] * len(sched.layers)
+        refill[1] = 65536.0
+        ops = sched.example_operands(jax.random.PRNGKey(7))
+        return sched, refill, ops
+
+    @pytest.mark.parametrize("gran", list(Granularity))
+    def test_jax_exact_desim_slower(self, planned, gran):
+        sched, refill, ops = planned
+        g0 = workload_to_graph(CASE_STUDY, sched.layers, granularity=gran)
+        g1 = workload_to_graph(CASE_STUDY, sched.layers, granularity=gran,
+                               refill_bytes=refill)
+        assert any(n.name.endswith("/kv_refill") for n in g1.nodes)
+        out0 = execute_workload_jax(g0, ops)
+        out1 = execute_workload_jax(g1, ops)
+        assert set(out0) == set(out1) == set(ops)
+        for label in ops:
+            assert np.array_equal(np.asarray(out0[label]),
+                                  np.asarray(out1[label])), label
+        assert simulate_graph(g1, CASE_STUDY).cycles > \
+            simulate_graph(g0, CASE_STUDY).cycles
+
+    def test_desim_backend_outputs_exact(self, planned):
+        """The desim backend's lockstep execution sees the refill in
+        cycles but not in the int8 outputs."""
+        sched, refill, ops = planned
+        de = backend.get("desim")
+        r0 = de.run_graph(workload_to_graph(CASE_STUDY, sched.layers), ops)
+        r1 = de.run_graph(workload_to_graph(CASE_STUDY, sched.layers,
+                                            refill_bytes=refill), ops)
+        assert r1.cycles > r0.cycles
+        for label in ops:
+            assert np.array_equal(np.asarray(r0.outputs[label]),
+                                  np.asarray(r1.outputs[label])), label
+
+
+# ----- the closed loop -------------------------------------------------------
+
+_PROMPTS = (32, 40, 32, 48, 32, 40, 32, 48)
+
+
+def _online(cfg, **extra):
+    eng = OnlineServingEngine(cfg, max_batch=4, max_new_tokens=16,
+                              policy="decode-priority", **extra)
+    res = eng.run(DeterministicArrivals(gap=4000.0, n=8,
+                                        prompt_lengths=_PROMPTS))
+    return eng, res
+
+
+@pytest.fixture(scope="module")
+def pressured(cfg):
+    return _online(cfg, kv_hot_blocks=10, kv_block_tokens=8)
+
+
+@pytest.fixture(scope="module")
+def unlimited(cfg):
+    return _online(cfg)
+
+
+@pytest.fixture(scope="module")
+def blind(cfg):
+    return _online(cfg, kv_hot_blocks=10, kv_block_tokens=8,
+                   policy_kw={"residency_aware": False})
+
+
+class TestOnlineKVPressure:
+    def test_pool_pressure_costs_makespan(self, pressured, unlimited):
+        """A hot pool smaller than the aggregate working set makes the
+        DES decode makespan visibly exceed the unlimited-KV baseline."""
+        _, res = pressured
+        _, res0 = unlimited
+        assert res.makespan > 1.01 * res0.makespan
+
+    def test_eviction_churn_happened(self, pressured):
+        eng, _ = pressured
+        c = eng.kv_cache.counters
+        assert c["evictions"] > 0 and c["refills"] > 0
+        assert c["refill_bytes"] > 0.0
+
+    def test_residency_aware_beats_blind_decode_p50(self, pressured,
+                                                    blind):
+        _, res = pressured
+        _, resb = blind
+        assert res.ttft_stats()["itl_p50"] < resb.ttft_stats()["itl_p50"]
+
+    def test_all_requests_complete(self, pressured):
+        eng, res = pressured
+        assert all(r.finish is not None for r in res.requests)
+        # every hot slot went back to the pool at completion
+        assert eng.kv_cache.allocated_slots() == ()
+
+    def test_metrics_counters(self, cfg):
+        from repro.obs import disable_metrics, enable_metrics
+        reg = enable_metrics()
+        try:
+            _online(cfg, kv_hot_blocks=10, kv_block_tokens=8)
+            snap = reg.snapshot()["counters"]
+        finally:
+            disable_metrics()
+            reg.clear()
+        for name in ("online_kv_evictions_total",
+                     "online_kv_refills_total",
+                     "online_kv_refill_bytes_total"):
+            assert sum(e["value"] for e in snap[name]) > 0, name
+
+    def test_deterministic_given_seed_and_arrivals(self, cfg, pressured):
+        eng1, res1 = pressured
+        eng2, res2 = _online(cfg, kv_hot_blocks=10, kv_block_tokens=8)
+        assert eng2.kv_cache.trace_digest() == eng1.kv_cache.trace_digest()
+        assert res2.makespan == res1.makespan
+
+    def test_oversized_request_rejected_up_front(self, cfg):
+        eng = OnlineServingEngine(cfg, max_new_tokens=16,
+                                  kv_hot_blocks=2, kv_block_tokens=8)
+        with pytest.raises(ValueError, match="working set"):
+            eng.run(DeterministicArrivals(gap=0.0, n=2,
+                                          prompt_lengths=(64, 64)))
+
+    def test_kv_commit_steps_validated(self, cfg):
+        with pytest.raises(ValueError, match="kv_commit_steps"):
+            OnlineServingEngine(cfg, kv_commit_steps=0)
+
+
+class TestSpanLogUnderChurn:
+    """Satellite: the cross-epoch SpanLog stays coherent through
+    eviction churn — markers present, every chain still closes."""
+
+    def test_markers_emitted(self, pressured):
+        _, res = pressured
+        phases = {s.phase for s in res.span_log}
+        assert "kv_evicted" in phases and "kv_refill" in phases
+
+    def test_validate_clean_under_churn(self, pressured, blind):
+        for _, res in (pressured, blind):
+            assert res.span_log.validate() == []
+
+    def test_marks_attach_to_live_requests(self, pressured):
+        """No kv mark after a request's completion: eviction victims
+        are always still-running streams."""
+        _, res = pressured
+        complete = {}
+        for s in res.span_log:
+            if s.phase == "complete":
+                complete[s.request] = s.end
+        for s in res.span_log:
+            if s.phase in ("kv_evicted", "kv_refill"):
+                assert s.end <= complete[s.request] + 1e-6

@@ -1,0 +1,81 @@
+"""Hypothesis property tests of the paged KV allocator.
+
+The randomised twin of ``test_kvcache.py``: arbitrary interleavings of
+append / ensure_resident / release must preserve the pool partition, the
+no-double-allocation invariant, LRU victim order and trace determinism.
+Skipped (like the other hypothesis suites in this repo) when the
+optional dependency is absent.
+"""
+
+import pytest
+
+hyp = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.serving.kvcache import KVPoolExhausted, PagedKVCache  # noqa: E402
+
+OPS = st.lists(
+    st.one_of(
+        st.tuples(st.just("append"), st.integers(0, 5), st.integers(1, 6)),
+        st.tuples(st.just("ensure"), st.integers(0, 5), st.just(0)),
+        st.tuples(st.just("release"), st.integers(0, 5), st.just(0)),
+    ),
+    min_size=1, max_size=40)
+
+
+def run(ops, *, hot_blocks=4, block_tokens=2, policy="lru", seed=0):
+    c = PagedKVCache(hot_blocks=hot_blocks, block_tokens=block_tokens,
+                     policy=policy, seed=seed)
+    for i, (kind, rid, n) in enumerate(ops):
+        try:
+            if kind == "append":
+                c.append(rid, n, t=float(i))
+            elif kind == "ensure":
+                c.ensure_resident(rid, t=float(i))
+            else:
+                c.release(rid, t=float(i))
+        except KVPoolExhausted:
+            pass                       # legal outcome, state must stay sane
+    return c
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=OPS, policy=st.sampled_from(("lru", "recompute")))
+def test_partition_and_no_double_allocation(ops, policy):
+    c = run(ops, policy=policy)
+    free, alloc = c.free_slots(), c.allocated_slots()
+    assert set(free) | set(alloc) == set(range(c.hot_blocks))
+    assert set(free) & set(alloc) == set()
+    assert len(alloc) == len(set(alloc))      # no slot owned twice
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=OPS, seed=st.integers(0, 7))
+def test_traces_identical_across_runs(ops, seed):
+    a = run(ops, seed=seed)
+    b = run(ops, seed=seed)
+    assert a.trace == b.trace
+    assert a.trace_digest() == b.trace_digest()
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=OPS)
+def test_eviction_times_monotonic(ops):
+    """Victims leave in call order — the LRU policy never reorders the
+    trace against the logical clock."""
+    c = run(ops)
+    times = [e[1] for e in c.trace]
+    assert times == sorted(times)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=OPS, policy=st.sampled_from(("lru", "recompute")))
+def test_refill_restores_full_residency(ops, policy):
+    c = run(ops, policy=policy)
+    for rid in range(6):
+        try:
+            c.ensure_resident(rid, t=99.0)
+        except KVPoolExhausted:
+            continue
+        assert c.residency(rid) == 1.0
+        assert c.refill_bytes(rid) == 0.0

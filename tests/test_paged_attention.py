@@ -1,0 +1,124 @@
+"""Bit-exactness of paged attention against the contiguous reference.
+
+The paged path gathers block-table pages back into the contiguous
+layout and runs the identical kernel, so every comparison here is exact
+array equality (int8 in, int8 out — no tolerances).  Both attention
+routes are covered: the pure-jnp ``decode_attention`` and the Pallas
+``flash_attention`` kernel (interpret mode).  The granularity/backend
+sweep (tile/panel/layer lowering on jax + desim with KV refill nodes in
+the graph) lives in ``test_kv_residency.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention.ops import decode_attention, flash_attention
+from repro.kernels.attention.paged import (gather_paged,
+                                           paged_decode_attention,
+                                           paged_flash_attention, to_paged)
+
+
+def int8(key, shape):
+    return jax.random.randint(key, shape, -127, 128, dtype=jnp.int8)
+
+
+def caches(seed=0, b=2, hkv=2, s=40, d=16):
+    k0, k1 = jax.random.split(jax.random.PRNGKey(seed))
+    return int8(k0, (b, hkv, s, d)), int8(k1, (b, hkv, s, d))
+
+
+# ----- page layout ----------------------------------------------------------
+
+def test_round_trip_is_identity():
+    k, v = caches(s=40)
+    kp, vp, table = to_paged(k, v, 8, seed=3)
+    assert np.array_equal(gather_paged(kp, table, 40), k)
+    assert np.array_equal(gather_paged(vp, table, 40), v)
+
+
+def test_round_trip_with_ragged_tail():
+    k, v = caches(s=37)                      # not a block multiple
+    kp, vp, table = to_paged(k, v, 8, seed=1)
+    assert kp.shape == (2 * 5, 2, 8, 16)     # padded to 5 blocks
+    assert np.array_equal(gather_paged(kp, table, 37), k)
+
+
+def test_block_table_is_shuffled():
+    k, v = caches()
+    _, _, table = to_paged(k, v, 8, seed=2)
+    flat = np.asarray(table).ravel()
+    assert sorted(flat) == list(range(flat.size))
+    assert not np.array_equal(flat, np.arange(flat.size))
+
+
+def test_to_paged_validates():
+    k, v = caches()
+    with pytest.raises(ValueError, match="block_tokens"):
+        to_paged(k, v, 0)
+    with pytest.raises(ValueError, match="mismatch"):
+        to_paged(k, v[:, :, :-1], 8)
+
+
+# ----- decode route (pure jnp) ----------------------------------------------
+
+@pytest.mark.parametrize("block_tokens", (4, 8, 16))
+def test_paged_decode_bit_exact_int8(block_tokens):
+    k, v = caches(s=40)
+    q = int8(jax.random.PRNGKey(9), (2, 4, 1, 16))
+    cache_len = jnp.array([33, 40])
+    ref = decode_attention(q, k, v, cache_len)
+    kp, vp, table = to_paged(k, v, block_tokens, seed=7)
+    got = paged_decode_attention(q, kp, vp, table, cache_len, seq_len=40)
+    assert got.dtype == jnp.int8
+    assert np.array_equal(got, ref)
+
+
+def test_paged_decode_bit_exact_window_softcap():
+    k, v = caches(seed=4, s=48)
+    q = int8(jax.random.PRNGKey(5), (2, 4, 1, 16))
+    cache_len = jnp.array([48, 21])
+    ref = decode_attention(q, k, v, cache_len, window=16, softcap=50.0)
+    kp, vp, table = to_paged(k, v, 8, seed=2)
+    got = paged_decode_attention(q, kp, vp, table, cache_len, seq_len=48,
+                                 window=16, softcap=50.0)
+    assert np.array_equal(got, ref)
+
+
+def test_paged_decode_independent_of_page_placement():
+    """Different physical page orders give byte-identical outputs."""
+    k, v = caches(s=32)
+    q = int8(jax.random.PRNGKey(1), (2, 4, 1, 16))
+    cache_len = jnp.array([32, 30])
+    outs = []
+    for seed in (0, 1, 2):
+        kp, vp, table = to_paged(k, v, 8, seed=seed)
+        outs.append(np.asarray(paged_decode_attention(
+            q, kp, vp, table, cache_len, seq_len=32)))
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[1], outs[2])
+
+
+# ----- flash route (Pallas, interpret) --------------------------------------
+
+@pytest.mark.parametrize("block_tokens", (8, 16))
+def test_paged_flash_bit_exact_int8(block_tokens):
+    k, v = caches(s=32)
+    q = int8(jax.random.PRNGKey(3), (2, 4, 32, 16))
+    ref = flash_attention(q, k, v, block_q=16, block_kv=16)
+    kp, vp, table = to_paged(k, v, block_tokens, seed=5)
+    got = paged_flash_attention(q, kp, vp, table, seq_len=32,
+                                block_q=16, block_kv=16)
+    assert got.dtype == jnp.int8
+    assert np.array_equal(got, ref)
+
+
+def test_paged_flash_gqa_noncausal():
+    k, v = caches(seed=2, s=24)
+    q = int8(jax.random.PRNGKey(8), (2, 8, 8, 16))     # 8 q heads, 2 kv
+    ref = flash_attention(q, k, v, causal=False, block_q=8, block_kv=8)
+    kp, vp, table = to_paged(k, v, 8, seed=6)
+    got = paged_flash_attention(q, kp, vp, table, seq_len=24, causal=False,
+                                block_q=8, block_kv=8)
+    assert np.array_equal(got, ref)

@@ -60,6 +60,18 @@ class TestSpace:
         _, sched = regime.decode_regime_schedule()
         assert tune.schedule_bucket(sched) == "sched|u2|decode"
 
+    def test_schedule_bucket_kv_pressure_suffix(self):
+        """Refill-carrying schedules tune in their own bucket; an
+        all-zero stamp is the classic all-resident regime."""
+        import dataclasses
+        _, sched = regime.decode_regime_schedule()
+        refill = (0.0,) * (len(sched.layers) - 1) + (4096.0,)
+        kv = dataclasses.replace(sched, refill_bytes=refill)
+        assert tune.schedule_bucket(kv) == "sched|u2|decode|kv"
+        zero = dataclasses.replace(sched,
+                                   refill_bytes=(0.0,) * len(sched.layers))
+        assert tune.schedule_bucket(zero) == "sched|u2|decode"
+
     def test_candidates_lead_with_default_and_dedupe(self):
         for cands in (tune.gemm_candidates(CASE_STUDY),
                       tune.schedule_candidates(CASE_STUDY)):
